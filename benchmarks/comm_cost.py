@@ -1,0 +1,139 @@
+"""Benchmark: Figs. 2-5 -- communication cost vs testing accuracy.
+
+Algorithm 1 (connectivity-aware m(t)) vs FedAvg and COLREL under the
+paper's two regimes:
+
+  high D2S connectivity: p=0.1, phi_max=0.06, FedAvg m=57, COLREL m=52
+  low  D2S connectivity: p=0.2, phi_max=0.20, FedAvg m=26, COLREL m=15
+
+Cost model: (#D2S) + 0.1 x (#D2D) (paper Sec. 6.2).  The validated claim
+is the *relative* one -- Algorithm 1 reaches matched accuracy at lower
+total cost -- on a synthetic MNIST-shaped dataset with the paper's exact
+non-iid partition (labels sorted, 2 chunks per client, n=70, c=7).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+
+from repro.core.graphs import D2DNetwork
+from repro.core.server import FederatedServer, ServerConfig
+from repro.data import (FederatedBatcher, label_sorted_partition,
+                        make_classification)
+from repro.models import cnn as cnn_lib
+
+__all__ = ["run", "CASES"]
+
+CASES = {
+    "high": dict(p=0.1, phi_max=0.06, m_fedavg=57, m_colrel=52),
+    "low": dict(p=0.2, phi_max=0.20, m_fedavg=26, m_colrel=15),
+}
+
+
+def _cost_at_accuracy(history, target: float):
+    """(cost, round) at which test_acc first reaches target (nan if never)."""
+    cost = history.cumulative_cost()
+    for rec, c in zip(history.records, cost):
+        if rec.metrics.get("test_acc", 0.0) >= target:
+            return float(c), rec.t
+    return float("nan"), -1
+
+
+def run(case: str = "high", rounds: int = 15, model: str = "mlp",
+        n: int = 70, clusters: int = 7, seed: int = 0, T: int = 5,
+        batch: int = 16, samples: int = 7000, noise: float = 1.5,
+        lr0: float = 0.05, quiet: bool = False):
+    cfg_case = CASES[case]
+    rng = np.random.default_rng(seed)
+    ds_train = make_classification(n_samples=samples, noise=noise,
+                                   seed=seed)
+    ds_test = make_classification(n_samples=samples // 4, noise=noise,
+                                  seed=seed + 1)
+    parts = label_sorted_partition(ds_train, n, shards_per_client=2, rng=rng)
+    batcher = FederatedBatcher(ds_train, parts, T=T, batch_size=batch)
+
+    if model == "cnn":
+        params0, apply_fn = cnn_lib.init_cnn(seed), cnn_lib.cnn_apply
+    elif model == "mlp":
+        params0, apply_fn = cnn_lib.init_mlp(seed), cnn_lib.mlp_apply
+    else:
+        params0, apply_fn = cnn_lib.init_logreg(seed), cnn_lib.logreg_apply
+    loss_fn = partial(cnn_lib.l2_regularized_loss, apply_fn)
+
+    import jax.numpy as jnp
+    xs, ys = jnp.asarray(ds_test.x), jnp.asarray(ds_test.y)
+
+    def eval_fn(p):
+        return {"test_acc": cnn_lib.accuracy(apply_fn, p, xs, ys)}
+
+    def make_server(algorithm, m_fixed=None, bound_kind="auto"):
+        network = D2DNetwork(n=n, c=clusters, k_range=(6, 9),
+                             p_fail=cfg_case["p"])
+        # deviation from the paper's printed 0.02*0.1^t (which zeroes the
+        # step after ~2 rounds): same lr0, gentler decay -- see DESIGN §8.
+        sc = ServerConfig(T=T, t_max=rounds, phi_max=cfg_case["phi_max"],
+                          m_fixed=m_fixed, seed=seed,
+                          bound_kind=bound_kind,
+                          eta=lambda t: lr0 * (0.9 ** t))
+        return FederatedServer(network, loss_fn, params0, batcher, sc,
+                               algorithm=algorithm)
+
+    runs = {
+        # degree-only bounds (what the deployed server can compute) and the
+        # exact-sigma oracle (the regime the paper's figures operate in)
+        "semidec": make_server("semidec").run(eval_fn),
+        "semidec-exact": make_server(
+            "semidec", bound_kind="exact").run(eval_fn),
+        "fedavg": make_server("fedavg",
+                              cfg_case["m_fedavg"]).run(eval_fn),
+        "colrel": make_server("colrel",
+                              cfg_case["m_colrel"]).run(eval_fn),
+    }
+
+    final_accs = {k: h.records[-1].metrics["test_acc"]
+                  for k, h in runs.items()}
+    target = min(final_accs.values()) * 0.98     # matched-accuracy level
+    rows = []
+    for name, h in runs.items():
+        cost_at, round_at = _cost_at_accuracy(h, target)
+        rows.append(dict(
+            algorithm=name, case=case,
+            final_acc=final_accs[name],
+            total_cost=float(h.ledger.total_cost),
+            total_d2s=h.ledger.total_d2s,
+            total_d2d=h.ledger.total_d2d,
+            cost_at_matched_acc=cost_at,
+            rounds_to_matched_acc=round_at,
+            mean_m=float(np.mean([r.m_actual for r in h.records])),
+        ))
+        if not quiet:
+            r = rows[-1]
+            print(f"[{case}] {name:14s} acc={r['final_acc']:.3f} "
+                  f"cost={r['total_cost']:8.1f} "
+                  f"cost@acc>={target:.2f}: {r['cost_at_matched_acc']:8.1f} "
+                  f"mean m={r['mean_m']:.1f}")
+    if not quiet:
+        for base in ("fedavg", "colrel"):
+            bl = next(r for r in rows if r["algorithm"] == base)
+            for which in ("semidec", "semidec-exact"):
+                sd = next(r for r in rows if r["algorithm"] == which)
+                if np.isfinite(sd["cost_at_matched_acc"]) and \
+                        np.isfinite(bl["cost_at_matched_acc"]):
+                    sav = 1 - (sd["cost_at_matched_acc"]
+                               / bl["cost_at_matched_acc"])
+                    print(f"[{case}] {which} saves {100 * sav:.0f}% of "
+                          f"{base}'s cost at matched accuracy")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--case", default="high", choices=list(CASES))
+    ap.add_argument("--rounds", type=int, default=15)
+    ap.add_argument("--model", default="mlp",
+                    choices=("cnn", "mlp", "logreg"))
+    a = ap.parse_args()
+    run(case=a.case, rounds=a.rounds, model=a.model)

@@ -1,0 +1,62 @@
+"""Roofline table: aggregate artifacts/dryrun/*.json into the §Roofline
+markdown table (per arch x shape x mesh: three terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs ratio)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+__all__ = ["load_records", "markdown_table", "run"]
+
+ART_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "artifacts", "dryrun")
+
+
+def load_records(art_dir: str = ART_DIR, tag: Optional[str] = None
+                 ) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        stem = os.path.basename(path)[:-5]
+        parts = stem.split("__")
+        rec_tag = parts[3] if len(parts) > 3 else ""
+        if (tag or "") != rec_tag:
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        r["_tag"] = rec_tag
+        recs.append(r)
+    return recs
+
+
+def markdown_table(recs: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | useful ratio | peak GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in recs:
+        peak = r.get("peak_memory_bytes")
+        peak_s = f"{peak / 2**30:.1f}" if peak else "-"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {peak_s} |")
+    return "\n".join(lines)
+
+
+def run(art_dir: str = ART_DIR, quiet: bool = False):
+    recs = load_records(art_dir)
+    if not quiet:
+        print(markdown_table(recs))
+        doms = {}
+        for r in recs:
+            doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+        print(f"\n{len(recs)} combos; dominant-term distribution: {doms}")
+    return recs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,72 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure.
+
+  singular_bounds -- Sec. 5 bound tightness (Prop 5.1 / 5.2)
+  comm_cost       -- Figs. 2-5 (high/low D2S regimes)
+  convergence     -- Theorem 4.5 O(1/t) envelope
+  mixing_kernel   -- Pallas D2D-mixing kernel vs oracle
+  roofline_table  -- §Roofline terms from dry-run artifacts (if present)
+
+``python -m benchmarks.run [--only NAME] [--fast]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from . import (comm_cost, convergence, mixing_kernel, roofline_table,
+               singular_bounds, topology_ablation)
+
+BENCHES = ("singular_bounds", "topology_ablation", "comm_cost",
+           "convergence", "mixing_kernel", "roofline_table")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", choices=BENCHES)
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced trial counts / rounds")
+    ap.add_argument("--json-out", default="")
+    args = ap.parse_args(argv)
+
+    results = {}
+    selected = [args.only] if args.only else list(BENCHES)
+
+    for name in selected:
+        print(f"\n=== {name} " + "=" * (60 - len(name)), flush=True)
+        t0 = time.time()
+        if name == "singular_bounds":
+            results[name] = singular_bounds.run(
+                trials=50 if args.fast else 200)
+        elif name == "topology_ablation":
+            results[name] = topology_ablation.run(
+                trials=10 if args.fast else 50)
+        elif name == "comm_cost":
+            rounds = 6 if args.fast else 15
+            results[name] = (comm_cost.run("high", rounds=rounds)
+                             + comm_cost.run("low", rounds=rounds))
+        elif name == "convergence":
+            results[name] = convergence.run(rounds=10 if args.fast else 40)
+        elif name == "mixing_kernel":
+            results[name] = mixing_kernel.run()
+        elif name == "roofline_table":
+            try:
+                recs = roofline_table.run()
+                results[name] = [dict(arch=r["arch"], shape=r["shape"],
+                                      dominant=r["dominant"])
+                                 for r in recs]
+            except Exception as e:           # artifacts absent: not an error
+                print(f"(skipped: {e})")
+                results[name] = []
+        print(f"--- {name}: {time.time() - t0:.1f}s", flush=True)
+
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+    print("\nall benchmarks complete")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

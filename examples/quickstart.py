@@ -1,0 +1,62 @@
+"""Quickstart: 10 rounds of connectivity-aware semi-decentralized FL.
+
+Builds the paper's setup at small scale (n=20 clients, c=2 clusters),
+trains a logistic-regression model on a synthetic non-iid dataset with
+Algorithm 1, and prints how the server's connectivity-aware rule m(t)
+adapts to the sampled D2D topology each round.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from functools import partial
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graphs import D2DNetwork
+from repro.core.server import FederatedServer, ServerConfig
+from repro.data import (FederatedBatcher, label_sorted_partition,
+                        make_classification)
+from repro.models import cnn as cnn_lib
+
+
+def main():
+    n, clusters, rounds = 20, 2, 10
+    rng = np.random.default_rng(0)
+
+    # 1. data: synthetic 10-class task, label-sorted non-iid partition
+    ds = make_classification(n_samples=2000)
+    parts = label_sorted_partition(ds, n, shards_per_client=2, rng=rng)
+    batcher = FederatedBatcher(ds, parts, T=5, batch_size=32)
+
+    # 2. model + mu-strongly-convex loss (Assumption 1)
+    params = cnn_lib.init_logreg(seed=0)
+    loss_fn = partial(cnn_lib.l2_regularized_loss, cnn_lib.logreg_apply)
+
+    # 3. the time-varying D2D network: k-regular digraphs, 10% link failures
+    network = D2DNetwork(n=n, c=clusters, k_range=(6, 9), p_fail=0.1)
+
+    # 4. Algorithm 1 with connectivity threshold phi_max
+    cfg = ServerConfig(T=5, t_max=rounds, phi_max=2.0)
+    server = FederatedServer(network, loss_fn, params, batcher, cfg,
+                             algorithm="semidec")
+
+    xs, ys = jnp.asarray(ds.x), jnp.asarray(ds.y)
+
+    def eval_fn(p):
+        return {"acc": cnn_lib.accuracy(cnn_lib.logreg_apply, p, xs, ys)}
+
+    history = server.run(eval_fn=eval_fn)
+
+    print(f"\n{'t':>3} {'m(t)':>5} {'psi bound':>10} {'D2D':>5} {'acc':>7}")
+    for r in history.records:
+        print(f"{r.t:3d} {r.m_actual:5d} {r.psi_bound:10.3f} "
+              f"{r.d2d:5d} {r.metrics['acc']:7.3f}")
+    print(f"\ntotal communication cost (D2S + 0.1*D2D): "
+          f"{history.ledger.total_cost:.1f}")
+    print("note how m(t) tracks the sampled topology: denser clusters ->"
+          " smaller m -> fewer expensive uplinks.")
+
+
+if __name__ == "__main__":
+    main()

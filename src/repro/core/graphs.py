@@ -1,0 +1,205 @@
+"""Time-varying directed D2D cluster graphs (paper Sec. 2.2, 6.1.1).
+
+All host-side server math is numpy (the parameter server is the host); the
+jitted round functions in ``repro.core.rounds`` consume the resulting dense
+arrays as runtime inputs, so topology changes never trigger recompilation.
+
+Conventions
+-----------
+``W`` is the binary adjacency matrix of a cluster digraph with ``W[i, j] = 1``
+iff there is a communication link *from* client ``i`` *to* client ``j``
+(``i`` is an in-neighbor of ``j``).  Out-degree of ``i`` is ``W[i].sum()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "DegreeStats",
+    "ClusterGraph",
+    "D2DNetwork",
+    "k_regular_digraph",
+    "delete_edge_fraction",
+    "ensure_positive_out_degree",
+    "degree_stats",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DegreeStats:
+    """Degree statistics of one cluster digraph (paper Sec. 3.3 / Sec. 5)."""
+
+    size: int               # n_ell -- number of clients in the cluster
+    d_min_out: int          # d^+_min
+    d_max_out: int          # d^+_max
+    d_max_in: int           # d^-_max (called d^in_max in Prop. 5.2)
+    alpha: float            # d^+_min / n_ell   (minimum out-degree fraction)
+    eps: float              # (d^+_max - d^+_min) / d^+_min
+    varphi: float           # (d^-_max - d^+_min) / d^+_min
+
+    @property
+    def in_equals_out(self) -> bool:  # pragma: no cover - trivial
+        return self.d_max_in == self.d_max_out
+
+
+def degree_stats(W: np.ndarray) -> DegreeStats:
+    """Compute the degree statistics the server learns from the access point."""
+    W = np.asarray(W)
+    s = W.shape[0]
+    d_out = W.sum(axis=1).astype(int)
+    d_in = W.sum(axis=0).astype(int)
+    d_min_out = int(d_out.min())
+    d_max_out = int(d_out.max())
+    d_max_in = int(d_in.max())
+    if d_min_out <= 0:
+        raise ValueError("cluster digraph has a node with zero out-degree; "
+                         "apply ensure_positive_out_degree first")
+    return DegreeStats(
+        size=s,
+        d_min_out=d_min_out,
+        d_max_out=d_max_out,
+        d_max_in=d_max_in,
+        alpha=d_min_out / s,
+        eps=(d_max_out - d_min_out) / d_min_out,
+        varphi=(d_max_in - d_min_out) / d_min_out,
+    )
+
+
+def k_regular_digraph(s: int, k: int, rng: np.random.Generator,
+                      self_loops: bool = True) -> np.ndarray:
+    """Random k-regular digraph: every in-degree and out-degree equals ``k``.
+
+    Construction: the union of ``k`` disjoint permutation digraphs.  Each
+    permutation contributes exactly one out-edge and one in-edge per node, so
+    the union (when the permutations place no two edges on the same (i, j)
+    pair) is k-regular.  With ``self_loops=True`` the identity permutation is
+    always included (clients keep a share of their own gradient), matching
+    the consensus-style aggregation of eq. (2) where a client's own update
+    re-enters through the mixing.
+    """
+    if not 1 <= k <= s:
+        raise ValueError(f"need 1 <= k <= s, got k={k}, s={s}")
+    W = np.zeros((s, s), dtype=np.int8)
+    perms: List[np.ndarray] = []
+    if self_loops:
+        perms.append(np.arange(s))
+        W[np.arange(s), np.arange(s)] = 1
+    # Derangement-style shifts composed with random relabelings give disjoint
+    # permutations cheaply and deterministically terminate.
+    relabel = rng.permutation(s)
+    shift = 1
+    while len(perms) < k:
+        if shift >= s:
+            raise ValueError(f"cannot build {k}-regular digraph on {s} nodes")
+        perm = relabel[(np.argsort(relabel) + shift) % s]
+        cols = perm
+        rows = np.arange(s)
+        if W[rows, cols].any():  # pragma: no cover - defensive; shifts are disjoint
+            shift += 1
+            continue
+        W[rows, cols] = 1
+        perms.append(perm)
+        shift += 1
+    assert (W.sum(axis=1) == k).all() and (W.sum(axis=0) == k).all()
+    return W
+
+
+def delete_edge_fraction(W: np.ndarray, p: float,
+                         rng: np.random.Generator,
+                         protect_self_loops: bool = True) -> np.ndarray:
+    """Delete a fraction ``p`` of directed edges uniformly at random.
+
+    Models D2D link failures from client mobility / bandwidth issues
+    (paper Sec. 6.1.1 step (ii)).  Self-loops model a client's possession of
+    its own gradient and cannot "fail", so they are protected by default.
+    """
+    if not 0.0 <= p < 1.0:
+        raise ValueError(f"need 0 <= p < 1, got {p}")
+    W = np.array(W, copy=True)
+    rows, cols = np.nonzero(W)
+    if protect_self_loops:
+        keep = rows != cols
+        rows, cols = rows[keep], cols[keep]
+    n_edges = len(rows)
+    n_delete = int(round(p * n_edges))
+    if n_delete:
+        idx = rng.choice(n_edges, size=n_delete, replace=False)
+        W[rows[idx], cols[idx]] = 0
+    return ensure_positive_out_degree(W)
+
+
+def ensure_positive_out_degree(W: np.ndarray) -> np.ndarray:
+    """Guarantee every node has out-degree >= 1 (needed for column
+    stochasticity of the equal-neighbor matrix) by adding a self-loop where
+    all out-links failed."""
+    W = np.array(W, copy=True)
+    dead = W.sum(axis=1) == 0
+    if dead.any():
+        idx = np.nonzero(dead)[0]
+        W[idx, idx] = 1
+    return W
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterGraph:
+    """One strongly-connected-component snapshot (V_ell(t), E_ell(t))."""
+
+    vertices: np.ndarray       # global client indices, shape (n_ell,)
+    W: np.ndarray              # binary adjacency, shape (n_ell, n_ell)
+
+    @property
+    def size(self) -> int:
+        return len(self.vertices)
+
+    @property
+    def stats(self) -> DegreeStats:
+        return degree_stats(self.W)
+
+
+@dataclasses.dataclass
+class D2DNetwork:
+    """The time-varying D2D network G(t): ``c`` clusters over ``n`` clients.
+
+    ``sample(rng)`` draws one snapshot per the paper's generative model
+    (Sec. 6.1.1): per cluster, a k-regular digraph with ``k`` uniform on
+    ``k_range``, followed by deletion of a fraction ``p`` of edges.
+    """
+
+    n: int
+    c: int
+    k_range: Sequence[int] = (6, 7, 8, 9)
+    p_fail: float = 0.1
+    self_loops: bool = True
+    partition: Optional[List[np.ndarray]] = None
+
+    def __post_init__(self) -> None:
+        if self.partition is None:
+            if self.n % self.c != 0:
+                raise ValueError("default partition needs c | n")
+            per = self.n // self.c
+            self.partition = [np.arange(l * per, (l + 1) * per)
+                              for l in range(self.c)]
+        sizes = [len(v) for v in self.partition]
+        if sum(sizes) != self.n:
+            raise ValueError("partition does not cover [n]")
+
+    @property
+    def cluster_sizes(self) -> List[int]:
+        return [len(v) for v in self.partition]
+
+    def sample(self, rng: np.random.Generator) -> List[ClusterGraph]:
+        """One G(t) snapshot: a list of c cluster digraphs."""
+        out = []
+        for verts in self.partition:
+            s = len(verts)
+            k = int(rng.integers(min(self.k_range), max(self.k_range) + 1))
+            k = min(k, s)
+            W = k_regular_digraph(s, k, rng, self_loops=self.self_loops)
+            if self.p_fail > 0:
+                W = delete_edge_fraction(W, self.p_fail, rng)
+            out.append(ClusterGraph(vertices=np.asarray(verts), W=W))
+        return out

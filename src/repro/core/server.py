@@ -1,0 +1,170 @@
+"""Parameter-server orchestration: Algorithm 1 and the paper's baselines.
+
+The server is host-side control logic around the jitted round function of
+``repro.core.rounds``:
+
+* ``semidec`` -- Algorithm 1: D2D mixing with the time-varying
+  equal-neighbor matrix + the connectivity-aware ``m(t)`` rule (7).
+* ``fedavg``  -- McMahan et al.: no D2D (A = I), fixed ``m``.
+* ``colrel``  -- Yemini et al.: one column-stochastic D2D aggregation per
+  round, fixed ``m`` (no connectivity-aware tuning).
+
+All three share the same compiled round; they differ only in the runtime
+``A``/``tau``/``m`` fed to it -- which is exactly the paper's framing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import sampling
+from .adjacency import network_matrix
+from .bounds import exact_phi_ell, phi_ell_bound_from_stats
+from .graphs import D2DNetwork
+from .metrics import CommLedger, count_d2d_transmissions
+from .rounds import make_round_fn
+
+__all__ = ["ServerConfig", "RoundRecord", "History", "FederatedServer"]
+
+PyTree = Any
+BatchSampler = Callable[[np.random.Generator, int], PyTree]
+EvalFn = Callable[[PyTree], Dict[str, float]]
+EtaSchedule = Callable[[int], float]
+
+ALGORITHMS = ("semidec", "fedavg", "colrel")
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    T: int = 5                      # local SGD iterations per global round
+    t_max: int = 30                 # number of global rounds
+    phi_max: float = 0.06           # connectivity-factor threshold (Alg. 1 input)
+    m0: Optional[int] = None        # initial sample size (default: n)
+    m_fixed: Optional[int] = None   # fedavg / colrel sample size
+    bound_kind: str = "auto"        # 'regular' (5.1) | 'general' (5.2) | 'auto'
+                                    # | 'verbatim' (eq. 6 incl. +1)
+                                    # | 'exact' (oracle sigma from topology)
+    energy_ratio: float = 0.1       # E_D2D / E_Glob
+    seed: int = 0
+    eta: EtaSchedule = dataclasses.field(
+        default_factory=lambda: (lambda t: 0.02 * (0.1 ** t)))  # paper Sec. 6.1.3
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    t: int
+    m: int
+    m_actual: int
+    psi_bound: float      # server's bound on the connectivity factor (eq. 6)
+    d2s: int
+    d2d: int
+    eta: float
+    metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class History:
+    algorithm: str
+    records: List[RoundRecord] = dataclasses.field(default_factory=list)
+    ledger: CommLedger = dataclasses.field(default_factory=CommLedger)
+
+    def series(self, key: str) -> np.ndarray:
+        return np.array([r.metrics.get(key, np.nan) for r in self.records])
+
+    @property
+    def sample_sizes(self) -> np.ndarray:
+        return np.array([r.m for r in self.records])
+
+    def cumulative_cost(self) -> np.ndarray:
+        return self.ledger.cumulative_cost()
+
+
+class FederatedServer:
+    """Runs ``t_max`` global rounds of the chosen algorithm."""
+
+    def __init__(self, network: D2DNetwork, loss_fn, init_params: PyTree,
+                 batch_sampler: BatchSampler, config: ServerConfig,
+                 algorithm: str = "semidec", jit: bool = True):
+        if algorithm not in ALGORITHMS:
+            raise ValueError(f"algorithm must be one of {ALGORITHMS}")
+        if algorithm in ("fedavg", "colrel") and config.m_fixed is None:
+            raise ValueError(f"{algorithm} requires config.m_fixed")
+        self.network = network
+        self.config = config
+        self.algorithm = algorithm
+        self.params = init_params
+        self.batch_sampler = batch_sampler
+        self.round_fn = make_round_fn(loss_fn, jit=jit)
+        self.rng = np.random.default_rng(config.seed)
+        self._m_next = (config.m_fixed if algorithm != "semidec"
+                        else (config.m0 or network.n))
+
+    # -- one global aggregation round -------------------------------------
+
+    def _plan_round(self, t: int):
+        """Sample G(t), build A(t), and decide (m, tau) for this round."""
+        n = self.network.n
+        cfg = self.config
+        uses_d2d = self.algorithm in ("semidec", "colrel")
+
+        if uses_d2d:
+            clusters = self.network.sample(self.rng)
+            A = network_matrix(clusters, n)
+            d2d = sum(count_d2d_transmissions(c.W) for c in clusters)
+        else:
+            clusters = None
+            A = np.eye(n)
+            d2d = 0
+
+        psi_bound = float("nan")
+        m = self._m_next
+        if self.algorithm == "semidec":
+            # Alg. 1 line 11: the new graph's degree stats set m for the
+            # *next* sampling; for t=0 the input m(0) is used.
+            if cfg.bound_kind == "exact":
+                psis = [exact_phi_ell(c.W) for c in clusters]
+            else:
+                psis = [phi_ell_bound_from_stats(c.stats, cfg.bound_kind)
+                        for c in clusters]
+            sizes = [c.size for c in clusters]
+            self._m_next = sampling.min_clients(psis, sizes, n, cfg.phi_max)
+            if t > 0:
+                m = self._m_next
+            from .bounds import psi_total
+            psi_bound = psi_total(m, n, psis, sizes)
+
+        vertex_sets = ([c.vertices for c in clusters] if clusters is not None
+                       else self.network.partition)
+        tau, m_actual = sampling.sample_clients(self.rng, vertex_sets, m, n)
+        return A, tau, m, m_actual, d2d, psi_bound
+
+    def run(self, eval_fn: Optional[EvalFn] = None,
+            eval_every: int = 1) -> History:
+        cfg = self.config
+        history = History(algorithm=self.algorithm,
+                          ledger=CommLedger(energy_ratio=cfg.energy_ratio))
+        for t in range(cfg.t_max):
+            A, tau, m, m_actual, d2d, psi_bound = self._plan_round(t)
+            eta = float(cfg.eta(t))
+            batches = self.batch_sampler(self.rng, t)
+            self.params, _ = self.round_fn(
+                self.params, batches,
+                jnp.asarray(A, dtype=jnp.float32),
+                jnp.asarray(tau, dtype=jnp.float32),
+                jnp.asarray(float(m_actual), dtype=jnp.float32),
+                jnp.asarray(eta, dtype=jnp.float32))
+
+            rec = RoundRecord(t=t, m=m, m_actual=m_actual,
+                              psi_bound=psi_bound, d2s=m_actual, d2d=d2d,
+                              eta=eta)
+            if eval_fn is not None and (t % eval_every == 0
+                                        or t == cfg.t_max - 1):
+                rec.metrics = {k: float(v)
+                               for k, v in eval_fn(self.params).items()}
+            history.records.append(rec)
+            history.ledger.add_round(d2s=m_actual, d2d=d2d)
+        return history

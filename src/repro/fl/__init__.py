@@ -1,0 +1,9 @@
+"""Distributed (mesh) implementation of the paper's semi-decentralized FL
+round and the sharded inference steps.  ``repro.core.rounds`` is the
+single-host oracle with identical semantics."""
+
+from .distributed import (make_train_step, make_prefill_step,
+                          make_decode_step, build_topology_inputs)
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "build_topology_inputs"]

@@ -1,0 +1,367 @@
+"""Mesh-distributed semi-decentralized FL round (Algorithm 1) + sharded
+inference steps.
+
+Mapping (DESIGN §2): client i = one (pod, data) mesh index; D2D cluster =
+one pod (ICI domain); the equal-neighbor matrix ``A`` (block-diagonal over
+pods) and the sampling mask ``tau`` are *runtime inputs*, so one compiled
+step serves every round of Algorithm 1, FedAvg (A=I) and COLREL (fixed m).
+
+``train_step`` phases:
+  1. broadcast  -- global params -> per-client stacked params (leading
+     client axis sharded over (pod, data); model dims over 'model').
+  2. local SGD  -- ``lax.scan`` of T steps per client under ``jax.vmap``;
+     tensor parallelism inside each client is delegated to GSPMD via the
+     parameter shardings.
+  3. D2D mixing -- ``Delta = A @ X_diff`` over the client axis.  Three
+     interchangeable schedules (see ``mixing=``):
+       'ring'   -- intra-pod ``ppermute`` ring streaming neighbor deltas
+                   while accumulating ``a_ij X_j``: O(1) extra memory,
+                   n_data permute hops on cheap ICI.  TPU-native D2D.
+       'gather' -- ``all_gather`` the client axis then weighted-sum
+                   (O(n) memory blowup; the naive schedule).
+       'einsum' -- jit-level dense matmul over the stacked client axis
+                   (XLA chooses the schedule; paper eq. (3) verbatim).
+  4. D2S        -- ``psum`` of ``tau_i * Delta_i`` over (pod, data) --
+     the expensive cross-pod collective -- scaled by 1/m (paper eq. (4)).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.adjacency import network_matrix
+from repro.core.graphs import D2DNetwork
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.models import sharding as shard_rules
+from repro.launch.mesh import client_axes, model_axis_size, n_clients_of
+
+PyTree = Any
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "build_topology_inputs", "MIXINGS"]
+
+MIXINGS = ("ring", "gather", "einsum")
+
+
+def _shardings(mesh, specs: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def zero_specs(specs: PyTree, params: PyTree, data_size: int) -> PyTree:
+    """ZeRO-style global-parameter sharding: additionally shard dim 0 over
+    'data' wherever it is unsharded and divisible.  The global copy then
+    occupies 1/data_size of HBM per chip; the per-client broadcast
+    all-gathers it once per round and the D2S aggregation reduce-scatters
+    back (see ``_mix_and_aggregate``)."""
+
+    def one(spec, leaf):
+        t = tuple(spec)
+        # first unsharded, divisible dim (scanned stacks have a leading
+        # layer axis that rarely divides the data axis -- skip past it)
+        for i, s in enumerate(t):
+            if s is None and leaf.shape[i] % data_size == 0 \
+                    and leaf.shape[i] >= data_size:
+                return P(*(t[:i] + ("data",) + t[i + 1:]))
+        return spec
+
+    return jax.tree.map(one, specs, params,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# D2D mixing + D2S aggregation (shard_map over the mesh)
+# ---------------------------------------------------------------------------
+
+def _mix_and_aggregate(mesh, mixing: str, deltas: PyTree, A: jnp.ndarray,
+                       tau: jnp.ndarray, m: jnp.ndarray,
+                       global_params: PyTree, msize: int,
+                       zero: bool = False) -> PyTree:
+    """new_global = global + (1/m) sum_i tau_i (A @ deltas)_i.
+
+    All client-axis communication happens here: the D2D mixing over the
+    intra-pod 'data' axis and the D2S psum over (pod, data).
+    """
+    caxes = client_axes(mesh)
+    n_data = mesh.shape[caxes[-1]]
+    n = n_clients_of(mesh)
+
+    if mixing == "einsum":
+        # paper eq. (3) verbatim at the jit level; XLA picks the schedule.
+        def mix(d):
+            flat = d.reshape(n, -1)
+            out = jnp.einsum("ij,jp->ip", A.astype(flat.dtype), flat)
+            return out.reshape(d.shape)
+
+        mixed = jax.tree.map(mix, deltas)
+
+        def upd(g, d):
+            flat = d.reshape(n, -1)
+            agg = jnp.einsum("i,ip->p", tau.astype(flat.dtype), flat) / m
+            return (g + agg.reshape(g.shape)).astype(g.dtype)
+
+        return jax.tree.map(upd, global_params, mixed)
+
+    gspecs = shard_rules.param_specs(global_params, msize)
+    if zero:
+        gspecs = zero_specs(gspecs, global_params, mesh.shape[caxes[-1]])
+    dspecs = shard_rules.param_specs(global_params, msize, prefix=(caxes,))
+    def _zero_dim(s):
+        t = tuple(s)
+        return t.index("data") if "data" in t else -1
+
+    zero_dims = jax.tree.map(_zero_dim, gspecs,
+                             is_leaf=lambda x: isinstance(x, P))
+
+    def body(deltas, A, tau, m, global_params):
+        d_i = jax.lax.axis_index(caxes[-1])
+        p_i = jax.lax.axis_index(caxes[0]) if len(caxes) > 1 else 0
+        my = p_i * n_data + d_i
+        tau_my = jax.lax.dynamic_index_in_dim(tau, my, keepdims=False)
+
+        def a_of(j):
+            row = jax.lax.dynamic_index_in_dim(A, my, keepdims=False)
+            return jax.lax.dynamic_index_in_dim(row, j, keepdims=False)
+
+        if mixing == "ring":
+            perm = [(i, (i + 1) % n_data) for i in range(n_data)]
+
+            def step(r, carry):
+                recv, acc = carry
+                j = p_i * n_data + (d_i - r) % n_data
+                a = a_of(j)
+                acc = jax.tree.map(
+                    lambda ac, rv: ac + a.astype(rv.dtype) * rv, acc, recv)
+                recv = jax.tree.map(
+                    lambda rv: jax.lax.ppermute(rv, caxes[-1], perm), recv)
+                return recv, acc
+
+            zeros = jax.tree.map(jnp.zeros_like, deltas)
+            _, mixed = jax.lax.fori_loop(0, n_data, step, (deltas, zeros))
+        else:  # 'gather'
+            def mix_leaf(d):
+                g = jax.lax.all_gather(d, caxes, axis=0, tiled=True)
+                row_start = p_i * n_data
+                arow = jax.lax.dynamic_slice_in_dim(
+                    jax.lax.dynamic_index_in_dim(A, my, keepdims=False),
+                    row_start, n_data)
+                gpod = jax.lax.dynamic_slice_in_dim(g, row_start, n_data)
+                flat = gpod.reshape(n_data, -1)
+                out = (arow.astype(flat.dtype) @ flat).reshape(d.shape[1:])
+                return out[None]
+
+            mixed = jax.tree.map(mix_leaf, deltas)
+
+        # D2S: sum_i tau_i Delta_i over every client -- cross-pod collective
+        def agg_leaf(gl, mx, zd):
+            contrib = tau_my.astype(mx.dtype) * mx[0]
+            if zd >= 0:
+                # ZeRO: reduce-scatter over 'data' so each chip only
+                # receives (and stores) its own global-param shard.
+                part = jax.lax.psum_scatter(contrib, caxes[-1],
+                                            scatter_dimension=zd,
+                                            tiled=True)
+                if len(caxes) > 1:
+                    part = jax.lax.psum(part, caxes[:-1])
+                return (gl + part.astype(jnp.float32) / m).astype(gl.dtype)
+            total = jax.lax.psum(contrib, caxes)
+            return (gl + total.astype(jnp.float32) / m).astype(gl.dtype)
+
+        return jax.tree.map(agg_leaf, global_params, mixed, zero_dims)
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(dspecs, P(None, None), P(None), P(), gspecs),
+        out_specs=gspecs, check_vma=False,
+    )(deltas, A, tau, m, global_params)
+
+
+# ---------------------------------------------------------------------------
+# train step (Algorithm 1, one global round)
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, mesh, mixing: str = "ring",
+                    jit: bool = True, zero: bool = False,
+                    client_impl: str = "vmap"):
+    """Build ``train_step(global_params, tokens, A, tau, m, eta[, prefix])``.
+
+    tokens: (n_clients, T, B_local, S+1) int32 -- per-client, per-local-step
+    minibatches; inputs/targets are adjacent slices.  prefix (audio/vlm):
+    (n_clients, T, B_local, P, fdim).  Returns the new global params
+    (same sharding as the input -- rounds compose).
+
+    ``client_impl``:
+      'vmap'      -- batch the client axis; GSPMD partitions it (default).
+      'shardmap'  -- partial shard_map over the client axes only ('model'
+                     stays automatic).  Functionally identical; required
+                     for nesting manual 'model'-axis collectives inside the
+                     per-client step (SP-MLP / expert-parallel MoE), which
+                     vmap's replication rule cannot express (EXPERIMENTS
+                     §Perf pair A iter 6b).
+    """
+    if mixing not in MIXINGS:
+        raise ValueError(f"mixing must be one of {MIXINGS}")
+    if zero and mixing != "ring":
+        raise ValueError("zero sharding is implemented for ring mixing")
+    if client_impl not in ("vmap", "shardmap"):
+        raise ValueError("client_impl must be 'vmap' or 'shardmap'")
+    model = Model(cfg)
+    n = n_clients_of(mesh)
+    caxes = client_axes(mesh)
+    msize = model_axis_size(mesh)
+
+    def train_step(global_params, tokens, A, tau, m, eta, prefix=None):
+        cspecs = shard_rules.param_specs(global_params, msize,
+                                         prefix=(caxes,))
+        cshard = _shardings(mesh, cspecs)
+
+        # 1. broadcast global -> per-client stacked params
+        per_client = jax.tree.map(
+            lambda g: jnp.broadcast_to(g[None], (n,) + g.shape),
+            global_params)
+        per_client = jax.lax.with_sharding_constraint(per_client, cshard)
+
+        # 2. T local SGD steps per client (paper eq. (1))
+        def one_client(p0, toks, pe):
+            def step(p, xs):
+                if pe is None:
+                    tk = xs
+                    batch = (tk[..., :-1], tk[..., 1:])
+                else:
+                    tk, pex = xs
+                    batch = (tk[..., :-1], tk[..., 1:], pex)
+                g = jax.grad(model.loss)(p, batch)
+                return jax.tree.map(lambda a, b: (a - eta * b).astype(a.dtype),
+                                    p, g), None
+
+            xs = toks if pe is None else (toks, pe)
+            pT, _ = jax.lax.scan(step, p0, xs)
+            return pT
+
+        if client_impl == "vmap":
+            finals = jax.vmap(one_client)(
+                per_client, tokens,
+                prefix if prefix is not None else None) \
+                if prefix is not None else jax.vmap(
+                    lambda p0, t: one_client(p0, t, None))(per_client,
+                                                           tokens)
+        else:
+            # partial shard_map: client axes manual (each shard sees ONE
+            # client, squeezed), 'model' axis stays automatic so nested
+            # manual collectives (SP-MLP, EP-MoE) can claim it.
+            sq = lambda t: jax.tree.map(lambda a: a[0], t)       # noqa: E731
+            ex = lambda t: jax.tree.map(lambda a: a[None], t)    # noqa: E731
+            cax_spec = P(caxes)
+
+            def spec_of(tree, extra):
+                return jax.tree.map(
+                    lambda _: P(*((caxes,) + (None,) * extra)), tree)
+
+            if prefix is None:
+                body = lambda p0, t: ex(                         # noqa: E731
+                    one_client(sq(p0), sq(t), None))
+                in_specs = (
+                    jax.tree.map(lambda a: P(*((caxes,)
+                                               + (None,) * (a.ndim - 1))),
+                                 per_client),
+                    P(caxes, None, None, None))
+                finals = jax.shard_map(
+                    body, mesh=mesh, in_specs=in_specs,
+                    out_specs=in_specs[0], check_vma=False,
+                    axis_names=set(caxes))(per_client, tokens)
+            else:
+                body = lambda p0, t, pe: ex(                     # noqa: E731
+                    one_client(sq(p0), sq(t), sq(pe)))
+                pspec = jax.tree.map(
+                    lambda a: P(*((caxes,) + (None,) * (a.ndim - 1))),
+                    per_client)
+                finals = jax.shard_map(
+                    body, mesh=mesh,
+                    in_specs=(pspec, P(caxes, None, None, None),
+                              P(caxes, None, None, None, None)),
+                    out_specs=pspec, check_vma=False,
+                    axis_names=set(caxes))(per_client, tokens, prefix)
+        finals = jax.lax.with_sharding_constraint(finals, cshard)
+
+        # scaled cumulative gradients x_i^{(t,T)} - x^{(t)}
+        deltas = jax.tree.map(lambda f, g: f - g[None], finals,
+                              global_params)
+
+        # 3.+4. D2D mixing + D2S sampled aggregation
+        return _mix_and_aggregate(mesh, mixing, deltas, A, tau, m,
+                                  global_params, msize, zero=zero)
+
+    if not jit:
+        return train_step
+    return jax.jit(train_step)
+
+
+# ---------------------------------------------------------------------------
+# inference steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, mesh, batch_axes, cache_len: int,
+                      jit: bool = True):
+    """``prefill_step(params, tokens[, prefix]) -> (logits, cache)``."""
+    model = Model(cfg)
+    msize = model_axis_size(mesh)
+
+    def prefill_step(params, tokens, prefix=None):
+        logits, cache = model.prefill(params, tokens, prefix,
+                                      max_len=cache_len)
+        cspecs = shard_rules.cache_specs(cache, batch_axes, msize)
+        cache = jax.lax.with_sharding_constraint(
+            cache, _shardings(mesh, cspecs))
+        logits = jax.lax.with_sharding_constraint(
+            logits, NamedSharding(mesh, P(batch_axes, None)))
+        return logits, cache
+
+    return jax.jit(prefill_step) if jit else prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh, batch_axes, jit: bool = True,
+                     donate_cache: bool = True):
+    """``decode_step(params, cache, token, pos) -> (logits, cache)``.
+
+    The cache is donated by default (it is consumed every step): the new
+    cache aliases the old buffer, removing a full cache copy from both the
+    output and temp footprints -- decode is the memory-bound shape, so
+    this is the difference between fitting HBM or not for the 32k-deep
+    caches (EXPERIMENTS §Perf, decode note)."""
+    model = Model(cfg)
+    msize = model_axis_size(mesh)
+
+    def decode_step(params, cache, token, pos):
+        logits, new_cache = model.decode(params, cache, token, pos)
+        cspecs = shard_rules.cache_specs(new_cache, batch_axes, msize)
+        new_cache = jax.lax.with_sharding_constraint(
+            new_cache, _shardings(mesh, cspecs))
+        logits = jax.lax.with_sharding_constraint(
+            logits, NamedSharding(mesh, P(batch_axes, None)))
+        return logits, new_cache
+
+    if not jit:
+        return decode_step
+    kw = dict(donate_argnums=(1,)) if donate_cache else {}
+    return jax.jit(decode_step, **kw)
+
+
+# ---------------------------------------------------------------------------
+# topology inputs for the mesh round (host-side, paper Sec. 3.3)
+# ---------------------------------------------------------------------------
+
+def build_topology_inputs(network: D2DNetwork, rng: np.random.Generator,
+                          tau_idx: Optional[np.ndarray] = None
+                          ) -> Tuple[np.ndarray, Any]:
+    """Sample G(t) and return (A, clusters) ready to feed the mesh step.
+    Client ordering must match the mesh flattening (pod-major)."""
+    clusters = network.sample(rng)
+    A = network_matrix(clusters, network.n)
+    return A.astype(np.float32), clusters

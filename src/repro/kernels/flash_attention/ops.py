@@ -1,0 +1,43 @@
+"""Jitted wrapper for the flash-attention kernel: layout, padding, backend
+dispatch.  Public signature matches the model stack's (B, S, H, hd) layout."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["flash_attention"]
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "bq", "bk",
+                                    "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q (B,S,Hq,hd), k/v (B,S,Hkv,hd) -> (B,S,Hq,hd)."""
+    B, S, Hq, hd = q.shape
+    Sp = _pad_to(S, max(bq, bk))
+
+    def to_bhsd(x):
+        x = jnp.moveaxis(x, 1, 2)                      # (B,H,S,hd)
+        if Sp != S:
+            x = jnp.pad(x, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+        return x
+
+    out = flash_attention_pallas(
+        to_bhsd(q), to_bhsd(k), to_bhsd(v), causal=causal, window=window,
+        true_seq_k=S, bq=bq, bk=bk, interpret=interpret)
+    out = jnp.moveaxis(out, 1, 2)[:, :S]               # (B,S,Hq,hd)
+    return out

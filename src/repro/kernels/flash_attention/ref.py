@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for flash attention: causal (optionally sliding-window)
+GQA scaled-dot-product attention."""
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True,
+                  window: Optional[int] = None) -> jnp.ndarray:
+    """q (B,Sq,Hq,hd), k/v (B,Sk,Hkv,hd) -> (B,Sq,Hq,hd).
+
+    Hq must be a multiple of Hkv (grouped queries).  Scores/softmax in f32.
+    """
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    i = jnp.arange(Sq)[:, None] + (Sk - Sq)   # align ends for Sq != Sk
+    j = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= j <= i
+    if window is not None:
+        ok &= (i - j) < window
+    scores = scores + jnp.where(ok, 0.0, NEG_INF)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w.astype(q.dtype), v)
+    return out.reshape(B, Sq, Hq, hd)

@@ -1,0 +1,50 @@
+"""Jitted wrapper for the graph-mixing kernel: shape padding, pytree
+plumbing, and backend dispatch (interpret on CPU, compiled on TPU)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .mixing import mix_pallas
+from .ref import mix_ref
+
+PyTree = Any
+
+__all__ = ["mix", "mix_pytree"]
+
+_LANE = 128
+_SUBLANE = 8
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mix(A: jnp.ndarray, X: jnp.ndarray, *, chunk: int = 2048,
+        interpret: bool = True) -> jnp.ndarray:
+    """Delta = A @ X for arbitrary (n, p); pads to TPU tile alignment,
+    runs the Pallas kernel, and slices back."""
+    n, p = X.shape
+    n_pad = _pad_to(n, _SUBLANE)
+    p_pad = _pad_to(p, chunk)
+    A_p = jnp.zeros((n_pad, n_pad), A.dtype).at[:n, :n].set(A)
+    X_p = jnp.zeros((n_pad, p_pad), X.dtype).at[:n, :p].set(X)
+    out = mix_pallas(A_p, X_p, chunk=chunk, interpret=interpret)
+    return out[:n, :p]
+
+
+def mix_pytree(A: jnp.ndarray, deltas: PyTree, *, chunk: int = 2048,
+               interpret: bool = True) -> PyTree:
+    """Apply the mixing kernel to a pytree of per-client deltas (leaves with
+    leading client axis n), flattening trailing dims per leaf."""
+    def one(d):
+        flat = d.reshape(d.shape[0], -1)
+        return mix(A, flat, chunk=chunk,
+                   interpret=interpret).reshape(d.shape)
+
+    return jax.tree.map(one, deltas)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the D2D graph-mixing operator (paper eq. 3).
+
+``Delta = A @ X`` where ``A`` (n, n) is the (block-diagonal, column-
+stochastic) equal-neighbor matrix over clients and ``X`` (n, p) holds each
+client's flattened scaled cumulative gradient.
+"""
+
+import jax.numpy as jnp
+
+__all__ = ["mix_ref"]
+
+
+def mix_ref(A: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
+    """A (n, n) float; X (n, p) any float dtype -> (n, p) in X.dtype.
+
+    Accumulation in f32 (matches the kernel's MXU accumulator)."""
+    out = jnp.einsum("ij,jp->ip", A.astype(jnp.float32),
+                     X.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.astype(X.dtype)

@@ -1,0 +1,6 @@
+"""Launcher layer: production mesh, input shapes, dry-run, train/serve CLIs.
+
+NOTE: ``repro.launch.dryrun`` must be the process entry point when running
+the 512-device dry-run (it sets XLA_FLAGS before jax initializes devices).
+Importing this package never touches jax device state.
+"""

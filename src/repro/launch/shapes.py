@@ -1,0 +1,242 @@
+"""Assigned input shapes and abstract input specs for the dry-run.
+
+Four shapes (assignment):
+    train_4k     seq=4096    global_batch=256   -> train_step
+    prefill_32k  seq=32768   global_batch=32    -> prefill_step
+    decode_32k   seq=32768   global_batch=128   -> decode_step (KV cache)
+    long_500k    seq=524288  global_batch=1     -> decode_step, sub-quadratic
+
+``long_500k`` policy (DESIGN §4): SSM/hybrid decode from O(1)/windowed
+state natively; every attention arch runs an explicit sliding-window (8192)
+ring-buffer cache -- a sub-quadratic O(window) decode path -- so no arch
+skips the shape.
+
+Everything here is built with ``jax.eval_shape`` / ``ShapeDtypeStruct``:
+no device allocation ever happens for the full configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.models import sharding as shard_rules
+from .mesh import client_axes, model_axis_size, n_clients_of
+
+PyTree = Any
+
+__all__ = ["InputShape", "SHAPES", "shape_names", "production_config",
+           "train_inputs", "prefill_inputs", "decode_inputs", "input_specs",
+           "LONG_CONTEXT_WINDOW"]
+
+LONG_CONTEXT_WINDOW = 8192          # dense-arch long_500k sliding window
+DEFAULT_T = 5                       # paper's local SGD iterations
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str                       # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+    long_context: bool = False
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", "train", 4096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524288, 1,
+                            long_context=True),
+}
+
+
+def shape_names():
+    return list(SHAPES)
+
+
+def production_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Adapt an arch config to a production shape: chunked attention for
+    long sequences, sliding-window cache for long-context decode on
+    attention archs."""
+    changes: Dict[str, Any] = {}
+    if cfg.uses_attention:
+        changes["attn_impl"] = "chunked"
+        if shape.long_context and cfg.sliding_window is None:
+            changes["sliding_window"] = LONG_CONTEXT_WINDOW
+    return dataclasses.replace(cfg, **changes) if changes else cfg
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+
+def _batch_axes(batch: int, mesh) -> Optional[Tuple[str, ...]]:
+    """Largest prefix of the client axes that divides ``batch``."""
+    axes = client_axes(mesh)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if batch % total == 0:
+        return axes
+    # try the trailing ('data',) axis alone
+    if batch % mesh.shape[axes[-1]] == 0:
+        return (axes[-1],)
+    return None
+
+
+def _named(mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _sds(shape, dtype, mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=_named(mesh, spec))
+
+
+def param_structs(model: Model, mesh) -> Tuple[PyTree, PyTree]:
+    """(ShapeDtypeStruct pytree, NamedSharding pytree) for the params."""
+    shapes = jax.eval_shape(model.init, jax.random.key(0))
+    specs = shard_rules.param_specs(shapes, model_axis_size(mesh))
+    shardings = jax.tree.map(lambda s: _named(mesh, s), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    structs = jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        shapes, shardings)
+    return structs, shardings
+
+
+# ---------------------------------------------------------------------------
+# per-kind input builders (ShapeDtypeStruct stand-ins, never allocated)
+# ---------------------------------------------------------------------------
+
+def train_inputs(cfg: ModelConfig, shape: InputShape, mesh,
+                 T: int = DEFAULT_T, zero: bool = False) -> Dict[str, Any]:
+    """Inputs for the semi-decentralized ``train_step``.
+
+    tokens: (n_clients, T, B_local, S+1) -- per-client, per-local-step
+    minibatches (inputs/targets sliced inside the step).  A/tau/m/eta are
+    the paper's runtime topology/sampling inputs.
+    """
+    assert shape.kind == "train"
+    n = n_clients_of(mesh)
+    caxes = client_axes(mesh)
+    if shape.global_batch % n:
+        raise ValueError(f"global_batch {shape.global_batch} not divisible "
+                         f"by n_clients {n}")
+    b_local = shape.global_batch // n
+    model = Model(cfg)
+    if zero:
+        from repro.fl.distributed import zero_specs
+        shapes_t = jax.eval_shape(model.init, jax.random.key(0))
+        specs = shard_rules.param_specs(shapes_t, model_axis_size(mesh))
+        specs = zero_specs(specs, shapes_t, mesh.shape[caxes[-1]])
+        param_shardings = jax.tree.map(lambda s: _named(mesh, s), specs,
+                                       is_leaf=lambda x: isinstance(x, P))
+        params = jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+            shapes_t, param_shardings)
+    else:
+        params, param_shardings = param_structs(model, mesh)
+    cspec = P(caxes)
+    out = {
+        "global_params": params,
+        "tokens": _sds((n, T, b_local, shape.seq_len + 1), jnp.int32, mesh,
+                       P(caxes, None, None, None)),
+        "A": _sds((n, n), jnp.float32, mesh, P(None, None)),
+        "tau": _sds((n,), jnp.float32, mesh, P(None)),
+        "m": _sds((), jnp.float32, mesh, P()),
+        "eta": _sds((), jnp.float32, mesh, P()),
+    }
+    if cfg.frontend:
+        out["prefix"] = _sds(
+            (n, T, b_local, cfg.frontend_len, cfg.frontend_dim),
+            jnp.float32, mesh, P(caxes, None, None, None, None))
+    out["_param_shardings"] = param_shardings
+    out["_client_spec"] = cspec
+    return out
+
+
+def prefill_inputs(cfg: ModelConfig, shape: InputShape, mesh
+                   ) -> Dict[str, Any]:
+    assert shape.kind == "prefill"
+    model = Model(cfg)
+    params, param_shardings = param_structs(model, mesh)
+    baxes = _batch_axes(shape.global_batch, mesh)
+    out = {
+        "params": params,
+        "tokens": _sds((shape.global_batch, shape.seq_len), jnp.int32, mesh,
+                       P(baxes, None)),
+    }
+    if cfg.frontend:
+        out["prefix"] = _sds(
+            (shape.global_batch, cfg.frontend_len, cfg.frontend_dim),
+            jnp.float32, mesh, P(baxes, None, None))
+    out["_param_shardings"] = param_shardings
+    out["_batch_axes"] = baxes
+    return out
+
+
+def input_specs(arch: str, shape_name: str, mesh, *, T: int = DEFAULT_T,
+                zero: bool = False) -> Dict[str, Any]:
+    """Assignment entry point: ShapeDtypeStruct stand-ins (weak-type-
+    correct, shardable, no device allocation) for every input of the step
+    function selected by ``shape_name`` for architecture ``arch``."""
+    from repro.configs import get_config
+
+    shape = SHAPES[shape_name]
+    cfg = production_config(get_config(arch), shape)
+    if shape.kind == "train":
+        return train_inputs(cfg, shape, mesh, T=T, zero=zero)
+    if shape.kind == "prefill":
+        return prefill_inputs(cfg, shape, mesh)
+    return decode_inputs(cfg, shape, mesh)
+
+
+def cache_len_for(cfg: ModelConfig, shape: InputShape) -> int:
+    """Ring-buffer depth.  Prefill caches must cover the modality prefix
+    too (frontend positions are real attention targets); decode shapes
+    specify the KV depth directly."""
+    extra = cfg.frontend_len if (cfg.frontend and shape.kind == "prefill") \
+        else 0
+    if cfg.sliding_window is not None:
+        return min(shape.seq_len + extra, cfg.sliding_window)
+    return shape.seq_len + extra
+
+
+def decode_inputs(cfg: ModelConfig, shape: InputShape, mesh
+                  ) -> Dict[str, Any]:
+    """One-token ``decode_step`` with a ``seq_len``-deep cache.
+
+    For SSM the cache is the O(1) recurrent state; for attention archs it is
+    the (ring-buffered) KV/latent cache sized ``min(seq, window)``.
+    """
+    assert shape.kind == "decode"
+    model = Model(cfg)
+    params, param_shardings = param_structs(model, mesh)
+    baxes = _batch_axes(shape.global_batch, mesh)
+    W = cache_len_for(cfg, shape)
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, W))
+    cache_specs = shard_rules.cache_specs(cache_shapes, baxes,
+                                          model_axis_size(mesh))
+    cache_shardings = jax.tree.map(lambda s: _named(mesh, s), cache_specs,
+                                   is_leaf=lambda x: isinstance(x, P))
+    cache = jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        cache_shapes, cache_shardings)
+    out = {
+        "params": params,
+        "cache": cache,
+        "token": _sds((shape.global_batch,), jnp.int32, mesh, P(baxes)),
+        "pos": _sds((), jnp.int32, mesh, P()),
+    }
+    out["_param_shardings"] = param_shardings
+    out["_cache_shardings"] = cache_shardings
+    out["_batch_axes"] = baxes
+    return out

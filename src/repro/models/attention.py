@@ -1,0 +1,213 @@
+"""Grouped-query attention: full-sequence, prefill, and cached decode.
+
+Supports the assigned dense-family options: GQA (n_kv < n_heads), qk-norm
+(qwen3), qkv-bias (qwen1.5/qwen2/internvl2), partial rotary (stablelm-2),
+and sliding-window attention (the sub-quadratic variant used for the
+``long_500k`` decode shape -- the KV cache becomes a ring buffer of the
+window size, so memory is O(window), not O(context)).
+
+The full-sequence path can route through the Pallas flash-attention kernel
+(``cfg.attn_impl == 'flash'``); the jnp path below is its oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_rope, dense_init, rms_norm, rope_angles
+
+PyTree = Any
+
+__all__ = ["attn_init", "attention_full", "attention_decode", "make_kv_cache",
+           "NEG_INF"]
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig, dtype) -> PyTree:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "q": dense_init(ks[0], d, nq * hd, dtype, bias=cfg.qkv_bias),
+        "k": dense_init(ks[1], d, nkv * hd, dtype, bias=cfg.qkv_bias),
+        "v": dense_init(ks[2], d, nkv * hd, dtype, bias=cfg.qkv_bias),
+        "o": dense_init(ks[3], nq * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p: PyTree, x: jnp.ndarray,
+                 positions: jnp.ndarray):
+    """x (B,S,D), positions (S,) or (B,S) -> q (B,S,Hq,hd), k/v (B,S,Hkv,hd)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+
+    def proj(pp, n):
+        y = x @ pp["w"]
+        if "b" in pp:
+            y = y + pp["b"]
+        return y.reshape(B, S, n, hd)
+
+    q = proj(p["q"], cfg.n_heads)
+    k = proj(p["k"], cfg.n_kv_heads)
+    v = proj(p["v"], cfg.n_kv_heads)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    rot = int(hd * cfg.rope_fraction) - (int(hd * cfg.rope_fraction) % 2)
+    if rot:
+        cos, sin = rope_angles(positions, rot, cfg.rope_theta)
+        q = apply_rope(q, cos, sin, cfg.rope_fraction)
+        k = apply_rope(k, cos, sin, cfg.rope_fraction)
+    return q, k, v
+
+
+def _causal_mask(S: int, window: Optional[int], dtype) -> jnp.ndarray:
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    ok = j <= i
+    if window is not None:
+        ok &= (i - j) < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(dtype)
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q (B,S,Hq,hd), k/v (B,S2,Hkv,hd), mask (S,S2) additive."""
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (hd ** -0.5) + mask[None, None, None]
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(B, S, Hq * hd)
+
+
+def _chunked_sdpa(q, k, v, window: Optional[int], cfg: ModelConfig):
+    """Query-chunked causal attention: O(S * chunk) score memory instead of
+    O(S^2).  Exact (full-row softmax per chunk); this is the production path
+    for the 32k-prefill / 4k-train shapes -- the jnp analogue of the Pallas
+    flash kernel's HBM behaviour (scores never materialize at (S, S)).
+    """
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    C = min(cfg.attn_chunk, S)
+    # pad queries (not keys) up to a chunk multiple; padded rows attend
+    # everything (finite softmax) and are sliced away.  Falling back to the
+    # full (S, S) score tensor here is catastrophic at 32k (and its sharded
+    # contraction all-reduces S^2 partial sums).
+    nC = -(-S // C)
+    Sp = nC * C
+    qp = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0))) \
+        if Sp != S else q
+    qg = jnp.moveaxis(qp.reshape(B, nC, C, Hkv, G, hd), 1, 0)
+    j = jnp.arange(S)[None, :]
+    scale = hd ** -0.5
+
+    def chunk(carry, xs):
+        qc, i0 = xs
+        i = i0 + jnp.arange(C)[:, None]
+        ok = j <= i
+        if window is not None:
+            ok &= (i - j) < window
+        ok |= i >= S                           # padded rows: keep finite
+        mask = jnp.where(ok, 0.0, NEG_INF)
+        scores = jnp.einsum("bskgh,btkh->bkgst", qc, k,
+                            preferred_element_type=jnp.float32)
+        scores = scores * scale + mask[None, None, None]
+        w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+        return carry, out.reshape(B, C, Hq * hd)
+
+    _, outs = jax.lax.scan(chunk, None, (qg, jnp.arange(nC) * C))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sp, Hq * hd)
+    return out[:, :S]
+
+
+def attention_full(cfg: ModelConfig, p: PyTree, x: jnp.ndarray,
+                   positions: jnp.ndarray,
+                   window: Optional[int] = "cfg") -> jnp.ndarray:
+    """Full-sequence causal attention (training / prefill compute)."""
+    if window == "cfg":
+        window = cfg.sliding_window
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    if cfg.attn_impl == "flash":
+        from repro.kernels.flash_attention import ops as flash_ops
+        out = flash_ops.flash_attention(q, k, v, causal=True, window=window)
+        out = out.reshape(x.shape[0], x.shape[1], -1)
+    elif cfg.attn_impl == "chunked":
+        out = _chunked_sdpa(q, k, v, window, cfg)
+    else:
+        mask = _causal_mask(x.shape[1], window, jnp.float32)
+        out = _sdpa(q, k, v, mask, cfg)
+    return out @ p["o"]["w"]
+
+
+# ---------------------------------------------------------------------------
+# KV cache (ring buffer when window-limited)
+# ---------------------------------------------------------------------------
+
+def make_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  n_layers: int, dtype) -> PyTree:
+    """Cache leaves carry a leading layer axis (scanned with the blocks).
+
+    ``max_len`` should be min(context, sliding_window) -- the ring buffer.
+    ``kpos`` tracks the absolute position stored in each slot (-1 = empty);
+    it is shared across batch (decode is lock-step).
+    """
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((n_layers, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((n_layers, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "kpos": jnp.full((n_layers, max_len), -1, jnp.int32),
+    }
+
+
+def attention_decode(cfg: ModelConfig, p: PyTree, x: jnp.ndarray,
+                     cache: PyTree, pos: jnp.ndarray,
+                     window: Optional[int] = "cfg"
+                     ) -> Tuple[jnp.ndarray, PyTree]:
+    """One decode step.  x (B,1,D); cache leaves per-layer (no layer axis
+    here -- the block scan slices it).  pos: scalar int32 absolute position.
+
+    Returns (y (B,1,D), updated cache).
+    """
+    if window == "cfg":
+        window = cfg.sliding_window
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q, k, v = _project_qkv(cfg, p, x, positions=pos[None])
+    W = cache["k"].shape[1]
+    slot = (pos % W).astype(jnp.int32)
+
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    kpos = jax.lax.dynamic_update_slice(cache["kpos"], pos[None], (slot,))
+
+    age = pos - kpos                       # (W,)
+    ok = (kpos >= 0) & (age >= 0)
+    if window is not None:
+        ok &= age < window
+    mask = jnp.where(ok, 0.0, NEG_INF)[None, :]      # (1, W)
+
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, hd)
+    scores = jnp.einsum("bkgh,btkh->bkgt", qg, ck,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (hd ** -0.5) + mask[:, None, None]
+    wts = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgt,btkh->bkgh", wts, cv).reshape(B, 1, Hq * hd)
+    y = out @ p["o"]["w"]
+    return y, {"k": ck, "v": cv, "kpos": kpos}

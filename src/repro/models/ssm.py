@@ -1,0 +1,216 @@
+"""Mamba2 / SSD blocks (arXiv:2405.21060, state-space duality).
+
+Training/prefill uses the chunked SSD algorithm: within a chunk the output
+is computed in "attention form" (quadratic in the chunk length, MXU
+friendly); across chunks an O(L/Q) recurrence carries the (H, N, P) state.
+Decode is the O(1) recurrent step on the cached (conv_state, ssm_state).
+
+Projections are kept as separate matrices (w_x, w_z, w_B, w_C, w_dt) rather
+than one fused in_proj so each shards cleanly over the ``model`` axis
+without segment-boundary issues (DESIGN §5).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import lecun_normal, rms_norm
+
+PyTree = Any
+
+__all__ = ["ssm_init", "ssm_forward", "ssm_decode", "make_ssm_cache"]
+
+
+def ssm_init(key, cfg: ModelConfig, dtype) -> PyTree:
+    d, di = cfg.d_model, cfg.d_inner
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    W = cfg.ssm_conv_width
+    conv_ch = di + 2 * G * N
+    ks = jax.random.split(key, 8)
+    # dt bias initialized so softplus(dt_bias) spans [1e-3, 1e-1] (mamba2 default)
+    u = jax.random.uniform(ks[5], (H,), minval=1e-3, maxval=1e-1)
+    dt_bias = u + jnp.log(-jnp.expm1(-u))
+    return {
+        "w_x": lecun_normal(ks[0], (d, di), dtype),
+        "w_z": lecun_normal(ks[1], (d, di), dtype),
+        "w_B": lecun_normal(ks[2], (d, G * N), dtype),
+        "w_C": lecun_normal(ks[3], (d, G * N), dtype),
+        "w_dt": lecun_normal(ks[4], (d, H), dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "conv_w": (jax.random.normal(ks[6], (W, conv_ch)) / W).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "gate_norm": jnp.ones((di,), dtype),
+        "w_out": lecun_normal(ks[7], (di, d), dtype),
+    }
+
+
+def _proj_conv(cfg: ModelConfig, p: PyTree, x: jnp.ndarray):
+    """x (B,L,d) -> (xin (B,L,di), z, Bmat (B,L,G,N), Cmat, dt (B,L,H),
+    xBC_raw) after the depthwise causal conv on [x, B, C] (z and dt are not
+    convolved).  ``xBC_raw`` is the pre-conv channel stack -- its last W-1
+    rows seed the decode conv cache."""
+    B, L, _ = x.shape
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    di, W = cfg.d_inner, cfg.ssm_conv_width
+
+    z = x @ p["w_z"]
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"])                       # (B,L,H)
+    xBC = jnp.concatenate([x @ p["w_x"], x @ p["w_B"], x @ p["w_C"]], -1)
+    # depthwise causal conv, width W
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + L] * p["conv_w"][i] for i in range(W))
+    conv = jax.nn.silu(conv + p["conv_b"])
+    xin = conv[..., :di]
+    Bmat = conv[..., di:di + G * N].reshape(B, L, G, N)
+    Cmat = conv[..., di + G * N:].reshape(B, L, G, N)
+    return xin, z, Bmat, Cmat, dt, xBC
+
+
+def _expand_groups(mat: jnp.ndarray, H: int) -> jnp.ndarray:
+    """(B,...,G,N) -> (B,...,H,N) by broadcasting each group over its heads."""
+    G = mat.shape[-2]
+    rep = H // G
+    return jnp.repeat(mat, rep, axis=-2) if rep > 1 else mat
+
+
+def ssm_forward(cfg: ModelConfig, p: PyTree, x: jnp.ndarray) -> jnp.ndarray:
+    """Chunked SSD scan. x (B,L,d) -> (B,L,d); L must be a multiple of
+    ssm_chunk (the model pads the sequence if needed)."""
+    y, _, _ = _ssd_with_state(cfg, p, x)
+    return y
+
+
+def ssm_prefill(cfg: ModelConfig, p: PyTree, x: jnp.ndarray):
+    """Forward + the decode cache seeds: (y, final_state (B,H,N,P),
+    conv_tail (B,W-1,ch))."""
+    return _ssd_with_state(cfg, p, x)
+
+
+def _ssd_with_state(cfg: ModelConfig, p: PyTree, x: jnp.ndarray):
+    B, L_in, _ = x.shape
+    Q = cfg.ssm_chunk
+    pad = (-L_in) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    L = L_in + pad
+    nc = L // Q
+    H, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+
+    xin, z, Bm, Cm, dt, xBC_raw = _proj_conv(cfg, p, x)
+    if pad:
+        # padded steps must be identity for the recurrence: dt -> 0 gives
+        # decay exp(0)=1 and zero input contribution.
+        valid = (jnp.arange(L) < L_in)[None, :, None]
+        dt = jnp.where(valid, dt, 0.0)
+    xh = xin.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    Bh = _expand_groups(Bm, H).reshape(B, nc, Q, H, N).astype(jnp.float32)
+    Ch = _expand_groups(Cm, H).reshape(B, nc, Q, H, N).astype(jnp.float32)
+    dt = dt.reshape(B, nc, Q, H)
+
+    A = -jnp.exp(p["A_log"])                                  # (H,) negative
+    dA = dt * A                                               # (B,nc,Q,H)
+    cum = jnp.cumsum(dA, axis=2)                              # within-chunk
+    cum_end = cum[:, :, -1]                                   # (B,nc,H)
+
+    # --- intra-chunk (attention form) ---
+    scores = jnp.einsum("bcqhn,bcshn->bchqs", Ch, Bh)         # (B,nc,H,Q,Q)
+    # decay[b,c,h,q,s] = exp(cum[q] - cum[s])
+    cum_h = cum.transpose(0, 1, 3, 2)                         # (B,nc,H,Q)
+    decay = jnp.exp(cum_h[..., :, None] - cum_h[..., None, :])  # (B,nc,H,Q,Q)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(causal, scores * decay, 0.0)
+    Mdt = M * dt.transpose(0, 1, 3, 2)[:, :, :, None, :]      # weight dt[s]
+    y_intra = jnp.einsum("bchqs,bcshp->bcqhp", Mdt, xh)
+
+    # --- chunk states ---
+    decay_out = jnp.exp(cum_end[:, :, None] - cum)            # (B,nc,Q,H)
+    S = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp", decay_out * dt, Bh, xh)
+
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(cum_end)                            # (B,nc,H)
+
+    def step(state, inp):
+        cd, s_new = inp                                       # (B,H), (B,H,N,P)
+        out = state                                           # state BEFORE chunk
+        state = cd[..., None, None] * state + s_new
+        return state, out
+
+    xs = (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S, 1, 0))
+    init = jnp.zeros((B, H, N, P), jnp.float32)
+    final_state, states_before = jax.lax.scan(step, init, xs)
+    states_before = jnp.moveaxis(states_before, 0, 1)         # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp", Ch, states_before)
+    y_inter = y_inter * jnp.exp(cum)[..., None]
+
+    y = (y_intra + y_inter).reshape(B, L, H, P)
+    y = y + p["D"][:, None] * xin.reshape(B, L, H, P).astype(jnp.float32)
+    y = y.reshape(B, L, cfg.d_inner).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = (y @ p["w_out"])[:, :L_in]
+
+    W = cfg.ssm_conv_width
+    xBC_valid = xBC_raw[:, :L_in]
+    tail = jnp.pad(xBC_valid, ((0, 0), (W - 1, 0), (0, 0)))[:, L_in:]
+    return out, final_state, tail
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1) recurrent step)
+# ---------------------------------------------------------------------------
+
+def make_ssm_cache(cfg: ModelConfig, batch: int, n_layers: int,
+                   dtype) -> PyTree:
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    conv_ch = cfg.d_inner + 2 * G * N
+    return {
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv_width - 1, conv_ch),
+                          dtype),
+        "state": jnp.zeros((n_layers, batch, cfg.ssm_heads, N,
+                            cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+def ssm_decode(cfg: ModelConfig, p: PyTree, x: jnp.ndarray, cache: PyTree
+               ) -> Tuple[jnp.ndarray, PyTree]:
+    """One token step. x (B,1,d); cache per layer:
+    conv (B,W-1,ch), state (B,H,N,P)."""
+    B = x.shape[0]
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    di, W = cfg.d_inner, cfg.ssm_conv_width
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    xt = x[:, 0]                                              # (B,d)
+
+    z = xt @ p["w_z"]
+    dt = jax.nn.softplus((xt @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    xBC = jnp.concatenate([xt @ p["w_x"], xt @ p["w_B"], xt @ p["w_C"]], -1)
+
+    win = jnp.concatenate([cache["conv"], xBC[:, None]], axis=1)   # (B,W,ch)
+    conv = jnp.einsum("bwc,wc->bc", win, p["conv_w"]) + p["conv_b"]
+    conv = jax.nn.silu(conv)
+    new_conv = win[:, 1:]
+
+    xin = conv[:, :di].reshape(B, H, P).astype(jnp.float32)
+    Bm = _expand_groups(conv[:, di:di + G * N].reshape(B, G, N), H)
+    Cm = _expand_groups(conv[:, di + G * N:].reshape(B, G, N), H)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                      # (B,H)
+    state = (dA[..., None, None] * cache["state"]
+             + jnp.einsum("bh,bhn,bhp->bhnp", dt, Bm, xin))
+    y = jnp.einsum("bhn,bhnp->bhp", Cm, state)
+    y = y + p["D"][:, None] * xin
+    y = y.reshape(B, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = (y @ p["w_out"])[:, None]
+    return out, {"conv": new_conv, "state": state}

@@ -1,0 +1,12 @@
+"""Optimizer substrate."""
+
+from .optimizers import (Optimizer, adam, adamw, clip_by_global_norm,
+                         momentum, sgd)
+from .schedules import (constant, cosine, exponential, inverse_time,
+                        paper_experimental, warmup_cosine)
+
+__all__ = [
+    "Optimizer", "sgd", "momentum", "adam", "adamw", "clip_by_global_norm",
+    "constant", "exponential", "paper_experimental", "inverse_time",
+    "cosine", "warmup_cosine",
+]

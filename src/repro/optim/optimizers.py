@@ -1,0 +1,106 @@
+"""Functional optimizers (optax-style ``init``/``update`` pairs).
+
+The paper's algorithm uses plain SGD for the local steps (eq. 1); Adam/AdamW
+are provided for the centralized / server-side training paths of the larger
+architectures (examples + launch.train).  No external optimizer dependency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = ["Optimizer", "sgd", "momentum", "adam", "adamw",
+           "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jnp.ndarray],
+                     Tuple[PyTree, PyTree]]
+    # update(grads, state, params, lr) -> (new_params, new_state)
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        new = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                           params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, vel, params, lr):
+        vel = jax.tree.map(lambda v, g: beta * v + g.astype(v.dtype),
+                           vel, grads)
+        if nesterov:
+            step = jax.tree.map(lambda v, g: beta * v + g.astype(v.dtype),
+                                vel, grads)
+        else:
+            step = vel
+        new = jax.tree.map(lambda p, s: p - lr * s.astype(p.dtype),
+                           params, step)
+        return new, vel
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    count: jnp.ndarray
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(mu=jax.tree.map(f32, params),
+                         nu=jax.tree.map(f32, params),
+                         count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        count = state.count + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def step(p, m, v):
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        new = jax.tree.map(step, params, mu, nu)
+        return new, AdamState(mu=mu, nu=nu, count=count)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr_decoupled_wd: float = 0.01, **kw) -> Optimizer:
+    return adam(weight_decay=lr_decoupled_wd, **kw)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)

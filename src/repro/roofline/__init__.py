@@ -1,0 +1,5 @@
+from .roofline import (HW, RooflineReport, collective_bytes, roofline_report,
+                       model_flops)
+
+__all__ = ["HW", "RooflineReport", "collective_bytes", "roofline_report",
+           "model_flops"]

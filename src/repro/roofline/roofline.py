@@ -1,0 +1,143 @@
+"""Three-term roofline from the dry-run's compiled artifact (TPU v5e target).
+
+    compute    = HLO_FLOPs_per_device   / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device   / HBM_bw_per_chip
+    collective = coll_bytes_per_device  / ICI_link_bw
+
+``compiled.cost_analysis()`` runs on the post-SPMD, per-device module, so
+its flops/bytes are already per-chip -- dividing per-device values by
+per-chip peaks is exactly the assignment's ``global / (chips x peak)``.
+
+Collective bytes are NOT in cost_analysis: we parse the optimized HLO and
+sum the *result* sizes of every collective op (incl. async ``-start``
+forms, excluding their ``-done`` halves).  Result size is an upper bound on
+per-device wire traffic for all-reduce (2(N-1)/N ~= 2x payload crosses the
+wire, but payload == result size) and exact for permute/all-to-all; we
+report the per-op-kind breakdown so the term can be re-weighted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.models.config import ModelConfig
+
+__all__ = ["HW", "RooflineReport", "collective_bytes", "roofline_report",
+           "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """TPU v5e per-chip constants (assignment-specified)."""
+    peak_flops: float = 197e12          # bf16 FLOP/s
+    hbm_bw: float = 819e9               # B/s
+    ici_bw: float = 50e9                # B/s per link
+    hbm_bytes: float = 16e9             # capacity (context for memory report)
+
+
+V5E = HW()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+# '  %x = (f32[8,16]{1,0}, bf16[4]{0}) all-reduce-start(...)'
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+_OP_RE = re.compile(
+    r"=\s*(?P<type>\([^)]*\)|[a-z0-9\[\]{},:#*\s]*?)\s*"
+    r"(?P<op>" + "|".join(_COLLECTIVES) + r")(?P<async>-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes in an optimized per-device HLO."""
+    out: Dict[str, int] = {}
+    for m in _OP_RE.finditer(hlo_text):
+        if m.group("async") == "-done":
+            continue      # counted at the -start site
+        kind = m.group("op")
+        out[kind] = out.get(kind, 0) + _type_bytes(m.group("type"))
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_per_device: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_global: float
+    useful_ratio: float                 # MODEL_FLOPS / (HLO_FLOPs * chips)
+    dominant: str
+    peak_memory_bytes: Optional[float] = None
+    unknown_loops: int = 0              # while ops without known trip count
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg: ModelConfig, kind: str, tokens: int) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference), N = active params."""
+    n_active = cfg.param_count(active_only=bool(cfg.n_experts))
+    per_tok = 6 if kind == "train" else 2
+    return float(per_tok * n_active * tokens)
+
+
+def roofline_report(*, arch: str, shape: str, mesh: str, chips: int,
+                    flops_global: float, bytes_global: float,
+                    hlo_text: str,
+                    cfg: ModelConfig, kind: str, tokens: int,
+                    peak_memory: Optional[float] = None,
+                    hw: HW = V5E) -> RooflineReport:
+    """flops_global / bytes_global from the jaxpr walker (exact trip
+    counts); collective bytes per device from the HLO call-graph walk."""
+    from .hlo_walk import hlo_collective_bytes
+    coll, unknown_loops = hlo_collective_bytes(hlo_text)
+    coll_total = float(sum(coll.values()))
+    flops = flops_global / chips
+    byts = bytes_global / chips
+    mflops = model_flops(cfg, kind, tokens)
+    terms = {
+        "compute": flops / hw.peak_flops,
+        "memory": byts / hw.hbm_bw,
+        "collective": coll_total / hw.ici_bw,
+    }
+    dominant = max(terms, key=terms.get)
+    rep = RooflineReport(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        flops_per_device=flops, bytes_per_device=byts,
+        collective_per_device=coll,
+        compute_s=terms["compute"], memory_s=terms["memory"],
+        collective_s=terms["collective"],
+        model_flops_global=mflops,
+        useful_ratio=(mflops / flops_global) if flops_global
+        else float("nan"),
+        dominant=dominant, peak_memory_bytes=peak_memory,
+        unknown_loops=unknown_loops)
+    return rep

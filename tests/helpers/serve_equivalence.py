@@ -1,0 +1,53 @@
+"""Subprocess helper: mesh prefill_step/decode_step must reproduce the
+single-host cached path exactly (8-device (2,4) mesh, reduced arch)."""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+from dataclasses import replace                                 # noqa: E402
+
+import jax                                                      # noqa: E402
+import jax.numpy as jnp                                         # noqa: E402
+import numpy as np                                              # noqa: E402
+
+from repro.configs import get_config                            # noqa: E402
+from repro.fl import make_decode_step, make_prefill_step       # noqa: E402
+from repro.launch.mesh import make_debug_mesh                   # noqa: E402
+from repro.models.model import Model                            # noqa: E402
+
+
+def main() -> None:
+    assert len(jax.devices()) == 8
+    mesh = make_debug_mesh((2, 4), ("data", "model"))
+    for arch in ("qwen2-7b", "mamba2-1.3b", "deepseek-v2-236b"):
+        cfg = replace(get_config(arch, reduced=True), vocab_size=128)
+        model = Model(cfg)
+        params = model.init(jax.random.key(0))
+        rng = np.random.default_rng(0)
+        B, K = 2, 24
+        toks = jnp.asarray(rng.integers(0, 128, (B, K)), jnp.int32)
+        next_tok = jnp.asarray(rng.integers(0, 128, (B,)), jnp.int32)
+        pos = jnp.asarray(K, jnp.int32)
+
+        # single-host reference
+        ref_logits, ref_cache = model.prefill(params, toks, max_len=K + 4)
+        ref_dec, _ = model.decode(params, ref_cache, next_tok, pos)
+
+        prefill = make_prefill_step(cfg, mesh, ("data",), cache_len=K + 4)
+        decode = make_decode_step(cfg, mesh, ("data",))
+        with jax.set_mesh(mesh):
+            got_logits, cache = prefill(params, toks)
+            got_dec, _ = decode(params, cache, next_tok, pos)
+        np.testing.assert_allclose(np.asarray(got_logits),
+                                   np.asarray(ref_logits),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(got_dec),
+                                   np.asarray(ref_dec),
+                                   rtol=2e-4, atol=2e-4)
+        print(f"OK serve {arch}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

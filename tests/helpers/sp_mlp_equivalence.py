@@ -1,0 +1,50 @@
+"""Subprocess helper: explicit shard_map SP-MLP (mlp_apply_sp) matches the
+plain MLP through the full model, forward and gradients (8-device mesh)."""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+from dataclasses import replace                                 # noqa: E402
+
+import jax                                                      # noqa: E402
+import jax.numpy as jnp                                         # noqa: E402
+import numpy as np                                              # noqa: E402
+
+from repro.configs import get_config                            # noqa: E402
+from repro.launch.mesh import make_debug_mesh                   # noqa: E402
+from repro.models.model import Model                            # noqa: E402
+from repro.models.sharding import set_activation_sharding       # noqa: E402
+
+
+def main() -> None:
+    mesh = make_debug_mesh((2, 4), ("data", "model"))
+    cfg = replace(get_config("qwen2-7b", reduced=True), vocab_size=128)
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, 128, (2, 32)), jnp.int32)
+    tgt = jnp.asarray(rng.integers(0, 128, (2, 32)), jnp.int32)
+
+    ref, _ = m.forward(params, toks)
+    g_ref = jax.grad(m.loss)(params, (toks, tgt))
+
+    set_activation_sharding("model", sp_mlp=True)
+    try:
+        with jax.set_mesh(mesh):
+            got = jax.jit(lambda p, t: m.forward(p, t)[0])(params, toks)
+            g_got = jax.jit(jax.grad(m.loss))(params, (toks, tgt))
+    finally:
+        set_activation_sharding(None)
+
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_got)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-5)
+    print("OK sp-mlp", flush=True)
+
+
+if __name__ == "__main__":
+    main()

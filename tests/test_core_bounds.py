@@ -1,0 +1,150 @@
+"""Property tests: the degree-only psi bounds dominate the true singular
+values (Prop. 5.1 / 5.2) in their stated regimes, and the sampling rule is
+correct and monotone."""
+
+import numpy as np
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core import (D2DNetwork, connectivity_factor, degree_stats,
+                        delete_edge_fraction, equal_neighbor_matrix,
+                        exact_phi_ell, k_regular_digraph, min_clients,
+                        psi_ell_from_stats, psi_general, psi_regular,
+                        psi_total, sample_clients, top_singular_values)
+
+
+def _sigma_sq_sum(W):
+    s = top_singular_values(equal_neighbor_matrix(W), 2)
+    return float(s[0] ** 2 + s[1] ** 2)
+
+
+# ---------------------------------------------------------------------------
+# Prop. 5.1: in-degree == out-degree, alpha > 1/2, eps small.
+# ---------------------------------------------------------------------------
+
+@given(st.integers(8, 14), st.integers(0, 2**31))
+@settings(max_examples=60, deadline=None)
+def test_psi_regular_bounds_exact_regular_digraphs(s, seed):
+    """For exactly k-regular digraphs (eps = 0) with alpha > 1/2 the Prop 5.1
+    bound must dominate sigma1^2 + sigma2^2 (no O(eps^2) slack needed)."""
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(s // 2 + 1, s + 1))   # alpha > 1/2
+    W = k_regular_digraph(s, k, rng)
+    stats = degree_stats(W)
+    assert stats.eps == 0.0 and stats.alpha > 0.5
+    assert psi_regular(stats) + 1e-9 >= _sigma_sq_sum(W)
+
+
+@given(st.integers(9, 12), st.floats(0.0, 0.1), st.integers(0, 2**31))
+@settings(max_examples=60, deadline=None)
+def test_psi_regular_near_regular(s, p, seed):
+    """Paper regime (Sec 6.1.1): k-regular + small deletion fraction keeps
+    eps small; bound should still dominate (it holds up to O(eps^2))."""
+    rng = np.random.default_rng(seed)
+    W = delete_edge_fraction(k_regular_digraph(s, s - 1, rng), p, rng)
+    stats = degree_stats(W)
+    assume(stats.alpha > 0.5 and stats.eps <= 0.25)
+    # allow the documented O(eps^2) slack
+    slack = 4.0 * stats.eps ** 2 + 1e-9
+    assert psi_regular(stats) + slack >= _sigma_sq_sum(W)
+
+
+# ---------------------------------------------------------------------------
+# Prop. 5.2: general digraphs with alpha >= 1/2.
+# ---------------------------------------------------------------------------
+
+@given(st.integers(8, 16), st.floats(0.0, 0.3), st.integers(0, 2**31))
+@settings(max_examples=80, deadline=None)
+def test_psi_general_bounds_sigma_sum(s, p, seed):
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(s // 2 + 1, s + 1))
+    W = delete_edge_fraction(k_regular_digraph(s, k, rng), p, rng)
+    stats = degree_stats(W)
+    assume(stats.alpha >= 0.5)
+    assert psi_general(stats) + 1e-9 >= _sigma_sq_sum(W)
+
+
+@given(st.integers(8, 14), st.floats(0.0, 0.25), st.integers(0, 2**31))
+@settings(max_examples=60, deadline=None)
+def test_auto_bound_dominates_phi_ell(s, p, seed):
+    """The server's auto-selected psi_ell >= phi_ell (= sum - 1) always."""
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(s // 2 + 1, s + 1))
+    W = delete_edge_fraction(k_regular_digraph(s, k, rng), p, rng)
+    stats = degree_stats(W)
+    bound = psi_ell_from_stats(stats)
+    slack = 4.0 * stats.eps ** 2 + 1e-9
+    assert bound + slack >= exact_phi_ell(W)
+
+
+def test_remark1_clique_tightness():
+    """Remark 1: for a clique (alpha = 1, eps = 0), psi bounds give
+    sigma1^2 <= 1, sigma2^2 <= 0 -- tight against sigma1 >= 1, sigma2 >= 0."""
+    s = 12
+    W = np.ones((s, s), dtype=int)
+    stats = degree_stats(W)
+    assert stats.alpha == 1.0 and stats.eps == 0.0
+    assert psi_regular(stats) == pytest.approx(1.0)
+    assert _sigma_sq_sum(W) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Connectivity factor and the m(t) rule.
+# ---------------------------------------------------------------------------
+
+def test_connectivity_factor_eq5():
+    phis, sizes, n = [0.5, 1.0], [10, 10], 20
+    # (n/m - 1) * sum (n_l/n) phi_l
+    assert connectivity_factor(10, n, phis, sizes) == pytest.approx(
+        (2.0 - 1.0) * (0.5 * 0.5 + 0.5 * 1.0))
+    assert connectivity_factor(n, n, phis, sizes) == 0.0
+
+
+@given(st.lists(st.floats(0.01, 5.0), min_size=1, max_size=7),
+       st.floats(0.0, 3.0))
+@settings(max_examples=100, deadline=None)
+def test_min_clients_is_minimal_feasible(psis, phi_max):
+    sizes = [10] * len(psis)
+    n = sum(sizes)
+    m = min_clients(psis, sizes, n, phi_max)
+    assert 1 <= m <= n
+    assert psi_total(m, n, psis, sizes) <= phi_max + 1e-9
+    if m > 1:
+        assert psi_total(m - 1, n, psis, sizes) > phi_max
+
+
+def test_min_clients_extremes():
+    psis, sizes = [1.0] * 7, [10] * 7
+    n = 70
+    # phi_max = 0 forces full participation (Theorem 4.5 discussion)
+    assert min_clients(psis, sizes, n, 0.0) == n
+    # phi_max -> inf collapses to m = 1 (full decentralization)
+    assert min_clients(psis, sizes, n, 1e9) == 1
+
+
+@given(st.floats(0.01, 2.0), st.floats(0.0, 0.5))
+@settings(max_examples=50, deadline=None)
+def test_min_clients_monotone_in_phi_max(phi_max, bump):
+    psis, sizes = [0.8, 1.2, 0.6], [10, 10, 10]
+    m_tight = min_clients(psis, sizes, 30, phi_max)
+    m_loose = min_clients(psis, sizes, 30, phi_max + bump)
+    assert m_loose <= m_tight
+
+
+def test_sample_clients_proportional():
+    rng = np.random.default_rng(0)
+    verts = [np.arange(10 * l, 10 * (l + 1)) for l in range(7)]
+    tau, m_actual = sample_clients(rng, verts, m=35, n=70)
+    assert tau.shape == (70,)
+    assert set(np.unique(tau)) <= {0.0, 1.0}
+    # ceil((35/70)*10) = 5 per cluster
+    for v in verts:
+        assert tau[v].sum() == 5
+    assert m_actual == 35
+
+
+def test_sample_clients_full_participation():
+    rng = np.random.default_rng(1)
+    verts = [np.arange(5), np.arange(5, 10)]
+    tau, m_actual = sample_clients(rng, verts, m=10, n=10)
+    assert m_actual == 10 and (tau == 1).all()

@@ -1,0 +1,115 @@
+"""Unit + property tests for graph generation and equal-neighbor matrices."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (D2DNetwork, degree_stats, delete_edge_fraction,
+                        ensure_positive_out_degree, equal_neighbor_matrix,
+                        is_column_stochastic, k_regular_digraph,
+                        network_matrix, top_singular_values)
+
+
+@given(st.integers(4, 24), st.data())
+@settings(max_examples=40, deadline=None)
+def test_k_regular_digraph_is_regular(s, data):
+    k = data.draw(st.integers(1, s))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    W = k_regular_digraph(s, k, rng)
+    assert (W.sum(axis=1) == k).all(), "out-degrees must equal k"
+    assert (W.sum(axis=0) == k).all(), "in-degrees must equal k"
+    assert W.max() <= 1 and W.min() >= 0
+
+
+@given(st.integers(5, 16), st.floats(0.0, 0.5), st.integers(0, 2**31))
+@settings(max_examples=40, deadline=None)
+def test_deletion_keeps_positive_out_degree(s, p, seed):
+    rng = np.random.default_rng(seed)
+    W = k_regular_digraph(s, min(6, s), rng)
+    Wd = delete_edge_fraction(W, p, rng)
+    assert (Wd.sum(axis=1) >= 1).all()
+    # deletion never adds non-self-loop edges
+    off = ~np.eye(s, dtype=bool)
+    assert (Wd[off] <= W[off]).all()
+
+
+def test_deletion_fraction_exact():
+    rng = np.random.default_rng(0)
+    W = k_regular_digraph(10, 8, rng, self_loops=False)
+    n_edges = int(W.sum() - np.trace(W))
+    Wd = delete_edge_fraction(W, 0.25, rng, protect_self_loops=True)
+    removed = n_edges - int(Wd.sum() - np.trace(Wd)) + int(np.trace(Wd))
+    # removed edges = round(0.25 * n_edges); self-loops may be re-added
+    assert removed == round(0.25 * n_edges)
+
+
+@given(st.integers(4, 20), st.data())
+@settings(max_examples=60, deadline=None)
+def test_equal_neighbor_matrix_column_stochastic(s, data):
+    """Fact 1: A(t) is column-stochastic for any digraph with d^+ >= 1."""
+    k = data.draw(st.integers(1, s))
+    p = data.draw(st.floats(0.0, 0.6))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    W = delete_edge_fraction(k_regular_digraph(s, k, rng), p, rng)
+    A = equal_neighbor_matrix(W)
+    assert is_column_stochastic(A)
+
+
+def test_equal_neighbor_entries():
+    # explicit 3-node example: 0->1, 0->2, 1->2, 2->0 (no self loops)
+    W = np.array([[0, 1, 1],
+                  [0, 0, 1],
+                  [1, 0, 0]])
+    A = equal_neighbor_matrix(W)
+    # A[i,j] = W[j,i]/d_j^+ ; d^+ = [2,1,1]
+    expected = np.array([[0.0, 0.0, 1.0],
+                         [0.5, 0.0, 0.0],
+                         [0.5, 1.0, 0.0]])
+    np.testing.assert_allclose(A, expected)
+
+
+def test_zero_out_degree_raises_and_repair():
+    W = np.zeros((3, 3), dtype=int)
+    W[0, 1] = 1
+    with pytest.raises(ValueError):
+        equal_neighbor_matrix(W)
+    Wr = ensure_positive_out_degree(W)
+    A = equal_neighbor_matrix(Wr)
+    assert is_column_stochastic(A)
+
+
+def test_network_matrix_block_diagonal():
+    net = D2DNetwork(n=70, c=7, p_fail=0.1)
+    rng = np.random.default_rng(42)
+    clusters = net.sample(rng)
+    assert len(clusters) == 7
+    A = network_matrix(clusters, 70)
+    assert is_column_stochastic(A)
+    # no cross-cluster entries (assumption 2 of Sec. 2.2)
+    for a, ca in enumerate(clusters):
+        for b, cb in enumerate(clusters):
+            if a != b:
+                assert A[np.ix_(ca.vertices, cb.vertices)].sum() == 0
+
+
+def test_degree_stats_match_paper_definitions():
+    rng = np.random.default_rng(7)
+    W = delete_edge_fraction(k_regular_digraph(10, 8, rng), 0.2, rng)
+    st_ = degree_stats(W)
+    d_out = W.sum(axis=1)
+    d_in = W.sum(axis=0)
+    assert st_.d_min_out == d_out.min()
+    assert st_.d_max_out == d_out.max()
+    assert st_.d_max_in == d_in.max()
+    assert st_.alpha == pytest.approx(d_out.min() / 10)
+    assert st_.eps == pytest.approx((d_out.max() - d_out.min()) / d_out.min())
+    assert st_.varphi == pytest.approx((d_in.max() - d_out.min()) / d_out.min())
+
+
+def test_sigma1_of_column_stochastic_at_least_one():
+    """sigma_1 >= 1 for any column-stochastic matrix (Remark 1 lower bound)."""
+    rng = np.random.default_rng(3)
+    for _ in range(10):
+        W = delete_edge_fraction(k_regular_digraph(10, 7, rng), 0.15, rng)
+        s = top_singular_values(equal_neighbor_matrix(W), 2)
+        assert s[0] >= 1.0 - 1e-9

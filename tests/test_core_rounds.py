@@ -1,0 +1,187 @@
+"""Behaviour tests for the jitted Algorithm-1 round and its building blocks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (D2DNetwork, FederatedServer, ServerConfig,
+                        client_deltas, global_update, make_round_fn,
+                        mix_deltas, network_matrix)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def quad_loss(params, batch):
+    """Strongly convex per-client quadratic: f_i(x) = 0.5||x - b||^2 with the
+    target b carried in the batch (heterogeneous across clients)."""
+    x = params["x"]
+    b, = batch
+    return 0.5 * jnp.sum((x - b.mean(axis=0)) ** 2)
+
+
+def _client_batches(targets, T, B, p, noise, rng):
+    """leaves (n, T, B, p): noisy samples around per-client targets."""
+    n = targets.shape[0]
+    samp = targets[:, None, None, :] + noise * rng.standard_normal((n, T, B, p))
+    return (jnp.asarray(samp, dtype=jnp.float32),)
+
+
+def test_local_sgd_matches_manual_loop():
+    rng = np.random.default_rng(0)
+    p, T, B, n = 4, 5, 2, 3
+    targets = rng.standard_normal((n, p))
+    batches = _client_batches(targets, T, B, p, 0.0, rng)
+    params = {"x": jnp.zeros(p)}
+    eta = jnp.float32(0.1)
+    deltas = client_deltas(quad_loss, params, batches, eta)
+    # gradient of 0.5||x-b||^2 is (x-b); closed form after T steps:
+    # x_T = b + (1-eta)^T (x_0 - b); delta = x_T - x_0
+    expect = (targets + (1 - 0.1) ** T * (0.0 - targets)) - 0.0
+    np.testing.assert_allclose(np.asarray(deltas["x"]), expect, rtol=1e-5)
+
+
+def test_mix_deltas_matches_einsum_pytree():
+    rng = np.random.default_rng(1)
+    n = 6
+    A = rng.random((n, n)).astype(np.float32)
+    deltas = {"w": jnp.asarray(rng.standard_normal((n, 3, 4)), jnp.float32),
+              "b": jnp.asarray(rng.standard_normal((n, 5)), jnp.float32)}
+    mixed = mix_deltas(jnp.asarray(A), deltas)
+    np.testing.assert_allclose(
+        np.asarray(mixed["w"]),
+        np.einsum("ij,jkl->ikl", A, np.asarray(deltas["w"])), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(mixed["b"]),
+        np.einsum("ij,jk->ik", A, np.asarray(deltas["b"])), rtol=1e-5)
+
+
+def test_global_update_eq4():
+    n, p = 5, 3
+    rng = np.random.default_rng(2)
+    g = {"x": jnp.asarray(rng.standard_normal(p), jnp.float32)}
+    d = {"x": jnp.asarray(rng.standard_normal((n, p)), jnp.float32)}
+    tau = jnp.asarray([1, 0, 1, 1, 0], jnp.float32)
+    out = global_update(g, d, tau, jnp.float32(3.0))
+    expect = np.asarray(g["x"]) + np.asarray(d["x"])[[0, 2, 3]].sum(0) / 3.0
+    np.testing.assert_allclose(np.asarray(out["x"]), expect, rtol=1e-5)
+
+
+def test_column_stochastic_mixing_preserves_average():
+    """Column-stochasticity => sum_i Delta_i = sum_i X_i: with full sampling
+    the PS update equals the true average (the property that makes
+    column-stochastic matrices 'average-preserving')."""
+    rng = np.random.default_rng(3)
+    net = D2DNetwork(n=20, c=2, p_fail=0.2)
+    A = network_matrix(net.sample(rng), 20)
+    deltas = {"x": jnp.asarray(rng.standard_normal((20, 7)), jnp.float32)}
+    mixed = mix_deltas(jnp.asarray(A, jnp.float32), deltas)
+    np.testing.assert_allclose(np.asarray(mixed["x"]).sum(0),
+                               np.asarray(deltas["x"]).sum(0), rtol=1e-4)
+
+
+def test_fedavg_identity_mixing_full_sampling_is_plain_average():
+    """A = I, m = n: round reduces to exact FedAvg with full participation."""
+    rng = np.random.default_rng(4)
+    n, p, T, B = 8, 3, 4, 2
+    targets = rng.standard_normal((n, p))
+    batches = _client_batches(targets, T, B, p, 0.0, rng)
+    params = {"x": jnp.zeros(p)}
+    round_fn = make_round_fn(quad_loss)
+    new, _ = round_fn(params, batches, jnp.eye(n), jnp.ones(n),
+                      jnp.float32(n), jnp.float32(0.1))
+    deltas = client_deltas(quad_loss, params, batches, jnp.float32(0.1))
+    expect = np.asarray(deltas["x"]).mean(0)
+    np.testing.assert_allclose(np.asarray(new["x"]), expect, rtol=1e-5)
+
+
+def test_lemma_4_2_sampling_unbiasedness():
+    """E[x^{t+1}] over the sampling randomness equals xbar^{t+1} when each
+    client is sampled with equal probability (uniform within one cluster).
+    Monte-Carlo check of the decomposition's cross-term vanishing."""
+    rng = np.random.default_rng(5)
+    n, p = 10, 4
+    deltas = {"x": jnp.asarray(rng.standard_normal((n, p)), jnp.float32)}
+    g = {"x": jnp.zeros(p)}
+    m = 4
+    acc = np.zeros(p)
+    trials = 4000
+    for _ in range(trials):
+        idx = rng.choice(n, size=m, replace=False)
+        tau = np.zeros(n, dtype=np.float32)
+        tau[idx] = 1
+        out = global_update(g, deltas, jnp.asarray(tau), jnp.float32(m))
+        acc += np.asarray(out["x"])
+    mean = acc / trials
+    xbar = np.asarray(deltas["x"]).mean(0)
+    np.testing.assert_allclose(mean, xbar, atol=5e-2)
+
+
+def test_semidec_converges_on_quadratics():
+    """End-to-end Algorithm 1 on heterogeneous quadratics converges to the
+    global optimum x* = mean of client targets."""
+    rng = np.random.default_rng(6)
+    n, c, p, T = 20, 2, 5, 5
+    targets = rng.standard_normal((n, p)).astype(np.float32)
+    x_star = targets.mean(axis=0)
+    net = D2DNetwork(n=n, c=c, k_range=(7, 9), p_fail=0.1)
+
+    def sampler(r, t):
+        return _client_batches(targets, T, 2, p, 0.05, r)
+
+    cfg = ServerConfig(T=T, t_max=25, phi_max=0.3, seed=0,
+                       eta=lambda t: 0.3 / (1 + 0.2 * t))
+    server = FederatedServer(net, quad_loss, {"x": jnp.zeros(p)},
+                             sampler, cfg, algorithm="semidec")
+    hist = server.run(eval_fn=lambda prm: {
+        "gap": float(jnp.sum((prm["x"] - x_star) ** 2))})
+    gaps = hist.series("gap")
+    assert gaps[-1] < 0.05 * gaps[0] + 1e-3
+    # m(t) stays within [1, n] and the psi bound is respected
+    assert all(1 <= r.m <= n for r in hist.records)
+
+
+def test_fedavg_and_colrel_servers_run():
+    rng = np.random.default_rng(7)
+    n, p, T = 10, 3, 3
+    targets = rng.standard_normal((n, p)).astype(np.float32)
+    net = D2DNetwork(n=n, c=2, k_range=(4, 5), p_fail=0.1)
+
+    def sampler(r, t):
+        return _client_batches(targets, T, 2, p, 0.05, r)
+
+    for algo, d2d_expected in (("fedavg", 0), ("colrel", None)):
+        cfg = ServerConfig(T=T, t_max=4, m_fixed=6, seed=1,
+                           eta=lambda t: 0.2)
+        server = FederatedServer(net, quad_loss, {"x": jnp.zeros(p)},
+                                 sampler, cfg, algorithm=algo)
+        hist = server.run()
+        assert len(hist.records) == 4
+        if d2d_expected is not None:
+            assert hist.ledger.total_d2d == d2d_expected
+        else:
+            assert hist.ledger.total_d2d > 0
+        # fixed sampling size
+        assert all(r.m == 6 for r in hist.records)
+
+
+def test_semidec_m_adapts_to_connectivity():
+    """Denser clusters (no failures, high k) should need fewer uplinks than
+    sparse, failure-prone clusters at the same phi_max."""
+    rng = np.random.default_rng(8)
+    n, p, T = 20, 4, 3
+    targets = rng.standard_normal((n, p)).astype(np.float32)
+
+    def sampler(r, t):
+        return _client_batches(targets, T, 2, p, 0.05, r)
+
+    def run(net):
+        cfg = ServerConfig(T=T, t_max=6, phi_max=0.5, seed=2,
+                           eta=lambda t: 0.1)
+        s = FederatedServer(net, quad_loss, {"x": jnp.zeros(p)}, sampler,
+                            cfg, algorithm="semidec")
+        return s.run().sample_sizes[1:].mean()   # skip m(0)=n warmup
+
+    m_dense = run(D2DNetwork(n=n, c=2, k_range=(9, 10), p_fail=0.0))
+    m_sparse = run(D2DNetwork(n=n, c=2, k_range=(6, 7), p_fail=0.3))
+    assert m_dense <= m_sparse

@@ -1,0 +1,278 @@
+"""Mesh-distributed FL round + dry-run driver + roofline analyzers.
+
+Multi-device checks run in subprocesses (XLA_FLAGS device-count forcing
+must happen before jax initializes, and the main pytest process keeps the
+real 1-CPU backend per the assignment).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+HELPERS = os.path.join(REPO, "tests", "helpers")
+
+
+def _run(args, env_extra=None, timeout=560):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.update(env_extra or {})
+    return subprocess.run([sys.executable] + args, capture_output=True,
+                          text=True, timeout=timeout, env=env, cwd=REPO)
+
+
+# ---------------------------------------------------------------------------
+# distributed train_step == Algorithm 1 reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_mesh_train_step_matches_reference():
+    r = _run([os.path.join(HELPERS, "dist_equivalence.py")],
+             env_extra={"XLA_FLAGS":
+                        "--xla_force_host_platform_device_count=8"})
+    assert r.returncode == 0, r.stdout + r.stderr
+    for mixing in ("ring", "gather", "einsum"):
+        assert f"OK mixing={mixing}" in r.stdout
+    assert "OK zero" in r.stdout
+    assert "OK shardmap" in r.stdout
+    assert "OK shardmap+spmlp" in r.stdout
+    assert "OK multi-round" in r.stdout
+
+
+@pytest.mark.slow
+def test_sp_mlp_matches_plain():
+    r = _run([os.path.join(HELPERS, "sp_mlp_equivalence.py")],
+             env_extra={"XLA_FLAGS":
+                        "--xla_force_host_platform_device_count=8"})
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK sp-mlp" in r.stdout
+
+
+@pytest.mark.slow
+def test_expert_parallel_moe_matches_oracle():
+    r = _run([os.path.join(HELPERS, "moe_ep_equivalence.py")],
+             env_extra={"XLA_FLAGS":
+                        "--xla_force_host_platform_device_count=8"})
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK moe-ep forward" in r.stdout
+    assert "OK moe-ep grad" in r.stdout
+
+
+@pytest.mark.slow
+def test_mesh_serve_steps_match_reference():
+    r = _run([os.path.join(HELPERS, "serve_equivalence.py")],
+             env_extra={"XLA_FLAGS":
+                        "--xla_force_host_platform_device_count=8"})
+    assert r.returncode == 0, r.stdout + r.stderr
+    for arch in ("qwen2-7b", "mamba2-1.3b", "deepseek-v2-236b"):
+        assert f"OK serve {arch}" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# dry-run driver (debug mesh)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_dryrun_driver_writes_artifact(tmp_path):
+    out = str(tmp_path / "dry")
+    r = _run(["-m", "repro.launch.dryrun", "--arch", "stablelm-1.6b",
+              "--shape", "decode_32k", "--mesh", "2,4", "--out", out],
+             env_extra={"REPRO_DRYRUN_DEVICES": "8"})
+    assert r.returncode == 0, r.stdout + r.stderr
+    path = os.path.join(out, "stablelm-1.6b__decode_32k__2x4.json")
+    with open(path) as f:
+        rec = json.load(f)
+    assert rec["dominant"] in ("compute", "memory", "collective")
+    assert rec["flops_per_device"] > 0
+    assert rec["bytes_per_device"] > 0
+    assert rec["chips"] == 8
+
+
+# ---------------------------------------------------------------------------
+# jaxpr cost walker (single device, exact answers)
+# ---------------------------------------------------------------------------
+
+def test_jaxpr_cost_matmul_exact():
+    from repro.roofline.jaxpr_cost import cost_of_lowered
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    c = cost_of_lowered(lambda x, y: x @ y, a, b)
+    assert c["flops"] == 2 * 64 * 128 * 32
+    assert c["bytes"] == (64 * 128 + 128 * 32 + 64 * 32) * 4
+
+
+def test_jaxpr_cost_scan_multiplies_trips():
+    from repro.roofline.jaxpr_cost import cost_of_lowered
+
+    def f(x, w):
+        def body(c, wi):
+            return c @ wi, None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    x = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    w = jax.ShapeDtypeStruct((7, 16, 16), jnp.float32)
+    c = cost_of_lowered(f, x, w)
+    assert c["flops"] == 7 * 2 * 16 ** 3
+
+
+def test_jaxpr_cost_counts_remat_recompute():
+    from repro.roofline.jaxpr_cost import cost_of_lowered
+
+    def loss(w, x):
+        h = jax.checkpoint(lambda a: jnp.tanh(a @ w))(x)
+        return jnp.sum(h @ w)
+
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 32), jnp.float32)
+    base = cost_of_lowered(loss, w, x)
+
+    def loss_noremat(w, x):
+        h = jnp.tanh(x @ w)
+        return jnp.sum(h @ w)
+
+    plain = cost_of_lowered(loss_noremat, w, x)
+    g_remat = cost_of_lowered(lambda w, x: jax.grad(loss)(w, x), w, x)
+    g_plain = cost_of_lowered(
+        lambda w, x: jax.grad(loss_noremat)(w, x), w, x)
+    assert base["flops"] == plain["flops"]
+    assert g_remat["flops"] > g_plain["flops"]      # recompute counted
+
+
+# ---------------------------------------------------------------------------
+# HLO collective walk (handcrafted modules)
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+HloModule test
+
+%body.1 (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %ar = f32[8]{0} all-reduce(%x), replica_groups={}
+  ROOT %t = (s32[], f32[8]) tuple(%i, %ar)
+}
+
+%cond.1 (p: (s32[], f32[8])) -> pred[] {
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %w = (s32[], f32[8]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"5"}}
+  %cp = f32[16]{0} collective-permute(%a), source_target_pairs={{0,1}}
+  ROOT %out = f32[8] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_walk_multiplies_while_bodies():
+    from repro.roofline.hlo_walk import hlo_collective_bytes
+    coll, unknown = hlo_collective_bytes(HLO_SAMPLE)
+    assert coll["all-reduce"] == 5 * 8 * 4
+    assert coll["collective-permute"] == 16 * 4
+    assert unknown == 0
+
+
+def test_hlo_walk_unknown_trip_flagged():
+    from repro.roofline.hlo_walk import hlo_collective_bytes
+    hlo = HLO_SAMPLE.replace(
+        ', backend_config={"known_trip_count":{"n":"5"}}', "")
+    coll, unknown = hlo_collective_bytes(hlo)
+    assert coll["all-reduce"] == 8 * 4
+    assert unknown == 1
+
+
+def test_type_bytes_tuple_types():
+    from repro.roofline.hlo_walk import _type_bytes
+    assert _type_bytes("(f32[8,2]{1,0}, bf16[4]{0})") == 8 * 2 * 4 + 4 * 2
+    assert _type_bytes("s32[128]") == 512
+
+
+# ---------------------------------------------------------------------------
+# ZeRO spec transform (pure function)
+# ---------------------------------------------------------------------------
+
+def test_zero_specs_shards_first_divisible_dim():
+    from jax.sharding import PartitionSpec as P
+    from repro.fl.distributed import zero_specs
+
+    params = {
+        "stacked": jax.ShapeDtypeStruct((59, 160, 64), jnp.float32),
+        "plain": jax.ShapeDtypeStruct((64, 32), jnp.float32),
+        "model_first": jax.ShapeDtypeStruct((64, 32), jnp.float32),
+        "tiny": jax.ShapeDtypeStruct((3, 5), jnp.float32),
+    }
+    specs = {
+        "stacked": P(None, None, None),
+        "plain": P(None, None),
+        "model_first": P("model", None),
+        "tiny": P(None, None),
+    }
+    out = zero_specs(specs, params, data_size=16)
+    # 59 not divisible -> skip to the expert dim
+    assert tuple(out["stacked"]) == (None, "data", None)
+    assert tuple(out["plain"]) == ("data", None)
+    # dim0 taken by 'model' -> dim1 (32 % 16 == 0)
+    assert tuple(out["model_first"]) == ("model", "data")
+    # nothing divisible -> unchanged
+    assert tuple(out["tiny"]) == (None, None)
+
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(1, 128), min_size=1, max_size=4))
+def test_zero_specs_never_double_shards(dims):
+    from jax.sharding import PartitionSpec as P
+    from repro.fl.distributed import zero_specs
+
+    leaf = jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+    spec = P(*([None] * len(dims)))
+    out = zero_specs({"x": spec}, {"x": leaf}, data_size=8)["x"]
+    t = tuple(out)
+    assert t.count("data") <= 1
+    for i, s in enumerate(t):
+        if s == "data":
+            assert dims[i] % 8 == 0 and dims[i] >= 8
+
+
+# ---------------------------------------------------------------------------
+# shapes / input_specs
+# ---------------------------------------------------------------------------
+
+def test_input_specs_are_abstract():
+    """input builders must never allocate device memory for full configs."""
+    from repro.configs import get_config
+    from repro.launch import shapes as shapes_lib
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    # use the real (tiny) devices only through eval_shape: no allocation.
+    import jax.sharding as shd
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = shapes_lib.production_config(
+        get_config("qwen3-32b"), shapes_lib.SHAPES["train_4k"])
+    inp = shapes_lib.train_inputs(cfg, shapes_lib.SHAPES["train_4k"], mesh,
+                                  T=2)
+    leaves = jax.tree.leaves(inp["global_params"])
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    assert inp["tokens"].shape == (1, 2, 256, 4097)
+
+    cfg_l = shapes_lib.production_config(
+        get_config("qwen3-32b"), shapes_lib.SHAPES["long_500k"])
+    assert cfg_l.sliding_window == shapes_lib.LONG_CONTEXT_WINDOW
+    assert cfg_l.attn_impl == "chunked"
+    dec = shapes_lib.decode_inputs(cfg_l, shapes_lib.SHAPES["long_500k"],
+                                   mesh)
+    ks = jax.tree.leaves(dec["cache"])
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in ks)
+    # ring buffer is window-sized, not 500k
+    k = dec["cache"]["layers"]["k"]
+    assert k.shape[2] == shapes_lib.LONG_CONTEXT_WINDOW

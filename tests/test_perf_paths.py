@@ -1,0 +1,175 @@
+"""Correctness of the §Perf optimization paths against their references:
+chunked attention (incl. non-multiple sequence lengths), chunked MLA,
+seq-chunked loss, ring-buffer roll fast path, prefill cache sizing."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.models import attention as attn
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+
+
+def _mini_cfg(**kw) -> ModelConfig:
+    base = dict(name="t", family="dense", n_layers=2, d_model=64,
+                n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                vocab_size=97, remat=False)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# chunked attention == reference (the 32k-prefill memory path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,chunk,window", [
+    (64, 16, None),       # exact multiple
+    (72, 16, None),       # padded queries (the VLM/audio prefix case)
+    (64, 16, 24),         # sliding window
+    (40, 64, None),       # chunk > S
+    (96, 32, 16),
+])
+def test_chunked_sdpa_matches_ref(S, chunk, window):
+    rng = np.random.default_rng(0)
+    B, Hq, Hkv, hd = 2, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, S, Hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, hd)), jnp.float32)
+    cfg = _mini_cfg(attn_impl="chunked", attn_chunk=chunk,
+                    sliding_window=window)
+    got = attn._chunked_sdpa(q, k, v, window, cfg)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.reshape(B, S, Hq * hd)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_attention_full_model_path():
+    """attn_impl='chunked' must match 'ref' through the whole model."""
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, 97, (2, 72)), jnp.int32)
+    cfg_ref = _mini_cfg(attn_impl="ref")
+    cfg_chk = _mini_cfg(attn_impl="chunked", attn_chunk=16)
+    m = Model(cfg_ref)
+    params = m.init(jax.random.key(0))
+    lr, _ = m.forward(params, toks)
+    lc, _ = Model(cfg_chk).forward(params, toks)
+    np.testing.assert_allclose(np.asarray(lc), np.asarray(lr),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_mla_matches_full():
+    cfg = get_config("deepseek-v2-236b", reduced=True)
+    cfg_chk = dataclasses.replace(cfg, attn_impl="chunked", attn_chunk=16)
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 72)), jnp.int32)
+    lr, _ = m.forward(params, toks)
+    lc, _ = Model(cfg_chk).forward(params, toks)
+    np.testing.assert_allclose(np.asarray(lc), np.asarray(lr),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# seq-chunked loss (no full fp32 logits) == plain loss
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([16, 32, 64]), st.integers(0, 2 ** 31 - 1))
+def test_loss_chunk_equivalence(chunk, seed):
+    cfg = _mini_cfg()
+    cfg_c = dataclasses.replace(cfg, loss_chunk=chunk)
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    rng = np.random.default_rng(seed)
+    tok = jnp.asarray(rng.integers(0, 97, (2, 64)), jnp.int32)
+    tgt = jnp.asarray(rng.integers(0, 97, (2, 64)), jnp.int32)
+    l0 = float(m.loss(params, (tok, tgt)))
+    l1 = float(Model(cfg_c).loss(params, (tok, tgt)))
+    assert abs(l0 - l1) < 1e-5 * max(1.0, abs(l0))
+
+
+def test_loss_chunk_gradients_match():
+    cfg = _mini_cfg()
+    cfg_c = dataclasses.replace(cfg, loss_chunk=16)
+    m = Model(cfg)
+    params = m.init(jax.random.key(3))
+    rng = np.random.default_rng(3)
+    tok = jnp.asarray(rng.integers(0, 97, (2, 64)), jnp.int32)
+    tgt = jnp.asarray(rng.integers(0, 97, (2, 64)), jnp.int32)
+    g0 = jax.grad(m.loss)(params, (tok, tgt))
+    g1 = jax.grad(Model(cfg_c).loss)(params, (tok, tgt))
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ring-buffer construction: roll/identity fast paths == scatter semantics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,W", [(8, 8), (12, 8), (16, 8), (6, 8), (20, 8)])
+def test_scatter_ring_layouts(S, W):
+    cfg = _mini_cfg()
+    m = Model(cfg)
+    full = jnp.arange(2 * 1 * S * 3, dtype=jnp.float32).reshape(2, 1, S, 3)
+    buf, kpos = m._scatter_ring(full, W, axis_seq=2)
+    assert buf.shape[2] == W
+    # every stored position must sit in slot pos % W with the right value
+    kp = np.asarray(kpos)
+    bf = np.asarray(buf)
+    fl = np.asarray(full)
+    for slot in range(W):
+        pos = kp[slot]
+        if pos < 0:
+            continue
+        assert pos % W == slot
+        np.testing.assert_array_equal(bf[:, :, slot], fl[:, :, pos])
+    # exactly the last min(S, W) positions are retained
+    kept = sorted(p for p in kp if p >= 0)
+    assert kept == list(range(max(S - W, 0), S))
+
+
+def test_prefill_cache_covers_frontend_prefix():
+    """Prefill + decode must stay exact for frontend (VLM/audio) archs:
+    the cache covers prefix positions (regression: prefix was truncated)."""
+    cfg = get_config("internvl2-1b", reduced=True)
+    m = Model(cfg)
+    params = m.init(jax.random.key(4))
+    rng = np.random.default_rng(4)
+    K = 24
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, K)), jnp.int32)
+    pe = jnp.asarray(rng.standard_normal(
+        (1, cfg.frontend_len, cfg.frontend_dim)), jnp.float32)
+    P = cfg.frontend_len
+    full, _ = m.forward(params, toks, pe)
+    # cache sized exactly P + K (the dry-run's prefill sizing)
+    logits_pre, cache = m.prefill(params, toks[:, :K - 1], pe,
+                                  max_len=P + K)
+    np.testing.assert_allclose(np.asarray(logits_pre),
+                               np.asarray(full[:, P + K - 2]),
+                               rtol=2e-3, atol=2e-3)
+    pos = jnp.asarray(P + K - 1, jnp.int32)
+    logits_dec, _ = m.decode(params, cache, toks[:, K - 1], pos)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(full[:, P + K - 1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_cache_len_for_adds_prefix_on_prefill():
+    from repro.launch.shapes import SHAPES, cache_len_for, production_config
+    cfg = production_config(get_config("internvl2-1b"),
+                            SHAPES["prefill_32k"])
+    assert cache_len_for(cfg, SHAPES["prefill_32k"]) == 32768 + 256
+    assert cache_len_for(cfg, SHAPES["decode_32k"]) == 32768
+    cfg_l = production_config(get_config("internvl2-1b"),
+                              SHAPES["long_500k"])
+    assert cache_len_for(cfg_l, SHAPES["long_500k"]) == 8192

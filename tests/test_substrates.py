@@ -1,0 +1,229 @@
+"""Tests: data pipeline, optimizers, checkpointing, paper CNN."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt import latest_checkpoint, load_checkpoint, save_checkpoint
+from repro.data import (Dataset, FederatedBatcher, dirichlet_partition,
+                        iid_partition, label_sorted_partition,
+                        make_classification, make_token_stream, lm_batches)
+from repro.models.cnn import (accuracy, cnn_apply, init_cnn, init_logreg,
+                              init_mlp, l2_regularized_loss, logreg_apply,
+                              mlp_apply, softmax_xent)
+from repro.optim import adam, clip_by_global_norm, momentum, sgd
+from repro.optim.schedules import (cosine, inverse_time, paper_experimental,
+                                   warmup_cosine)
+
+
+# ---------------------------------------------------------------------------
+# Data
+# ---------------------------------------------------------------------------
+
+def test_classification_dataset_shapes_and_determinism():
+    ds1 = make_classification(n_samples=500, seed=3)
+    ds2 = make_classification(n_samples=500, seed=3)
+    assert ds1.x.shape == (500, 28, 28, 1) and ds1.y.shape == (500,)
+    np.testing.assert_array_equal(ds1.x, ds2.x)
+    assert set(np.unique(ds1.y)) <= set(range(10))
+
+
+@given(st.integers(2, 20), st.integers(1, 3))
+@settings(max_examples=20, deadline=None)
+def test_label_sorted_partition_properties(n_clients, shards):
+    ds = make_classification(n_samples=1200, seed=0)
+    parts = label_sorted_partition(ds, n_clients, shards_per_client=shards)
+    assert len(parts) == n_clients
+    all_idx = np.concatenate(parts)
+    assert len(all_idx) == len(np.unique(all_idx))   # disjoint
+    # shards are contiguous intervals of the label-sorted order, so the
+    # total number of (shard, label) incidences is at most
+    # n_shards + n_labels - 1; per client that sums over its shards.
+    n_shards = n_clients * shards
+    total_incidences = sum(len(np.unique(ds.y[p])) for p in parts)
+    assert total_incidences <= n_shards + 10 - 1
+
+
+def test_label_sorted_partition_extreme_heterogeneity():
+    """Paper: 70 clients, 2 chunks each => ~2 labels per client."""
+    ds = make_classification(n_samples=7000, seed=1)
+    parts = label_sorted_partition(ds, 70, 2)
+    label_counts = [len(np.unique(ds.y[p])) for p in parts]
+    assert np.mean(label_counts) <= 3.0
+
+
+def test_dirichlet_and_iid_partitions_cover():
+    ds = make_classification(n_samples=1000, seed=2)
+    for parts in (dirichlet_partition(ds, 10, 0.5), iid_partition(ds, 10)):
+        total = sum(len(p) for p in parts)
+        assert total >= 0.9 * len(ds)
+        all_idx = np.concatenate(parts)
+        assert len(all_idx) == len(np.unique(all_idx))
+
+
+def test_federated_batcher_shapes():
+    ds = make_classification(n_samples=600, seed=0)
+    parts = label_sorted_partition(ds, 6, 2)
+    batcher = FederatedBatcher(ds, parts, T=4, batch_size=8)
+    x, y = batcher(np.random.default_rng(0), 0)
+    assert x.shape == (6, 4, 8, 28, 28, 1)
+    assert y.shape == (6, 4, 8)
+
+
+def test_token_stream_and_lm_batches():
+    toks = make_token_stream(n_tokens=4096, vocab=97, seed=0)
+    assert toks.min() >= 0 and toks.max() < 97
+    x, y = lm_batches(toks, np.random.default_rng(0), n_clients=4, T=2,
+                      batch_size=3, seq_len=16)
+    assert x.shape == (4, 2, 3, 16) and y.shape == x.shape
+    # causal shift property
+    x0 = np.asarray(x[0, 0, 0])
+    y0 = np.asarray(y[0, 0, 0])
+    np.testing.assert_array_equal(x0[1:], y0[:-1])
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+def _rosenbrock_grad_steps(opt, steps=400, lr=2e-3, jit_step=True):
+    params = {"x": jnp.array([-1.0, 1.5])}
+
+    def loss(p):
+        x, y = p["x"][0], p["x"][1]
+        return (1 - x) ** 2 + 100 * (y - x ** 2) ** 2
+
+    state = opt.init(params)
+
+    @jax.jit
+    def one(params, state):
+        g = jax.grad(loss)(params)
+        return opt.update(g, state, params, jnp.float32(lr))
+
+    for _ in range(steps):
+        params, state = one(params, state)
+    return float(loss(params))
+
+
+def test_sgd_momentum_adam_descend():
+    assert _rosenbrock_grad_steps(sgd()) < 4.0
+    assert _rosenbrock_grad_steps(momentum(0.9)) < 1.0
+    assert _rosenbrock_grad_steps(adam(), steps=2000, lr=2e-2) < 0.1
+
+
+def test_adam_bias_correction_first_step():
+    opt = adam(b1=0.9, b2=0.999)
+    params = {"w": jnp.array([1.0])}
+    state = opt.init(params)
+    g = {"w": jnp.array([0.5])}
+    new, _ = opt.update(g, state, params, jnp.float32(0.1))
+    # first Adam step is ~ -lr * sign-ish: m_hat/sqrt(v_hat) = 1
+    np.testing.assert_allclose(np.asarray(new["w"]), [0.9], atol=1e-5)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.array([3.0, 4.0])}           # norm 5
+    clipped = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(np.asarray(clipped["a"]), [0.6, 0.8],
+                               rtol=1e-5)
+    unclipped = clip_by_global_norm(g, 10.0)
+    np.testing.assert_allclose(np.asarray(unclipped["a"]), [3.0, 4.0],
+                               rtol=1e-5)
+
+
+def test_schedules():
+    assert paper_experimental()(0) == pytest.approx(0.02)
+    assert paper_experimental()(1) == pytest.approx(0.002)
+    s = inverse_time(4.0, 10.0)
+    assert s(0) == pytest.approx(0.4) and s(10) == pytest.approx(0.2)
+    c = cosine(1.0, 100)
+    assert c(0) == pytest.approx(1.0) and c(100) == pytest.approx(0.0, abs=1e-9)
+    w = warmup_cosine(1.0, 10, 110)
+    assert w(0) == pytest.approx(0.1) and w(9) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    params = {"layer": {"w": jnp.arange(6.0).reshape(2, 3),
+                        "b": jnp.zeros(3)},
+              "head": jnp.ones((4,), jnp.float32)}
+    p = save_checkpoint(str(tmp_path), 7, params, meta={"m_next": 12})
+    assert latest_checkpoint(str(tmp_path)) == p
+    restored, meta = load_checkpoint(p, jax.tree.map(jnp.zeros_like, params))
+    assert meta["step"] == 7 and meta["meta"]["m_next"] == 12
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_and_mismatch(tmp_path):
+    params = {"w": jnp.ones(3)}
+    for s in range(5):
+        save_checkpoint(str(tmp_path), s, params, keep=2)
+    ckpts = [f for f in os.listdir(tmp_path) if f.endswith(".npz")]
+    assert len(ckpts) == 2
+    bad = {"w": jnp.ones(3), "extra": jnp.ones(1)}
+    with pytest.raises(ValueError):
+        load_checkpoint(latest_checkpoint(str(tmp_path)), bad)
+    with pytest.raises(ValueError):
+        load_checkpoint(latest_checkpoint(str(tmp_path)),
+                        {"w": jnp.ones((4,))})
+
+
+# ---------------------------------------------------------------------------
+# Paper CNN / MLP / logreg
+# ---------------------------------------------------------------------------
+
+def test_cnn_shapes_and_param_count():
+    params = init_cnn(seed=0)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    # paper reports ~1.66M for this architecture
+    assert abs(n_params - 1_663_370) < 10_000
+    x = jnp.zeros((2, 28, 28, 1))
+    logits = cnn_apply(params, x)
+    assert logits.shape == (2, 10)
+    assert not bool(jnp.isnan(logits).any())
+
+
+def test_models_learn_synthetic_task():
+    ds = make_classification(n_samples=1024, seed=0)
+    x, y = jnp.asarray(ds.x), jnp.asarray(ds.y)
+
+    for init, apply, lr in ((init_mlp, mlp_apply, 0.1),
+                            (init_logreg, logreg_apply, 0.1)):
+        params = init(seed=0)
+
+        @jax.jit
+        def step(p, xb, yb):
+            g = jax.grad(lambda q: softmax_xent(apply(q, xb), yb))(p)
+            return jax.tree.map(lambda a, b: a - lr * b, p, g)
+
+        for i in range(60):
+            sl = slice((i * 64) % 1024, (i * 64) % 1024 + 64)
+            params = step(params, x[sl], y[sl])
+        acc = accuracy(apply, params, x, y)
+        assert acc > 0.6, f"{apply.__name__} failed to learn: acc={acc}"
+
+
+def test_l2_regularized_loss_strongly_convex_grad():
+    """grad difference inner product >= mu ||x-y||^2 spot check."""
+    params_a = init_logreg(seed=0)
+    params_b = init_logreg(seed=1)
+    ds = make_classification(n_samples=64, seed=0)
+    batch = (jnp.asarray(ds.x), jnp.asarray(ds.y))
+    mu = 0.05
+    loss = lambda p: l2_regularized_loss(logreg_apply, p, batch, mu=mu)
+    ga = jax.grad(loss)(params_a)
+    gb = jax.grad(loss)(params_b)
+    inner = sum(jnp.sum((x - y) * (u - v)) for x, y, u, v in zip(
+        jax.tree.leaves(ga), jax.tree.leaves(gb),
+        jax.tree.leaves(params_a), jax.tree.leaves(params_b)))
+    sq = sum(jnp.sum((u - v) ** 2) for u, v in zip(
+        jax.tree.leaves(params_a), jax.tree.leaves(params_b)))
+    assert float(inner) >= mu * float(sq) - 1e-6
