@@ -1,8 +1,23 @@
-"""Benchmark: Pallas D2D-mixing kernel vs the jnp oracle.
+"""Benchmark: fused one-pass mix+aggregate vs the two-pass schedule.
 
-Correctness (allclose across shapes/dtypes) + wall time on this host
-(interpret mode on CPU; the kernel's BlockSpec tiling targets TPU VMEM).
-Payload sizes bracket the paper's CNN (1.66M params) and per-leaf LM deltas.
+Correctness (allclose across shapes/dtypes), wall time on this host
+(interpret mode on CPU; the kernels' BlockSpec tiling targets TPU VMEM),
+and a bytes-moved model of per-round HBM traffic.  Payload sizes bracket
+the paper's CNN (1.66M params) and per-leaf LM deltas.
+
+Traffic model (payload (n, p), element size B; A and the tau row are
+kilobytes and ignored):
+
+  two-pass   read X (npB) + write mixed (npB) + re-read mixed (npB)
+             + write agg (pB)                          ~ 3 npB + pB
+  fused      read X ONCE (npB) + write mixed (npB) + write agg (pB)
+                                                       ~ 2 npB + pB
+  agg-only   read X ONCE (npB) + write agg (pB)        ~  npB + pB
+
+i.e. the fused kernel reads the payload once per round where the
+two-pass schedule reads it twice (X, then mixed) -- a ~2x reduction in
+payload reads and ~1.5x in total traffic; the aggregate-only variant
+(FedAvg A=I, or rounds that don't log per-client deltas) is ~3x.
 """
 
 from __future__ import annotations
@@ -13,16 +28,39 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.mixing.ops import mix
+from repro.kernels.mixing.ops import aggregate, mix, mix_aggregate
 from repro.kernels.mixing.ref import mix_ref
 
-__all__ = ["run"]
+__all__ = ["run", "traffic_model"]
+
+
+def traffic_model(n: int, p: int, itemsize: int) -> dict:
+    """Bytes moved per round for each schedule (payload terms only)."""
+    npB = n * p * itemsize
+    pB = p * 4                      # fp32 aggregate row
+    return dict(
+        bytes_two_pass=3 * npB + pB,
+        bytes_fused=2 * npB + pB,
+        bytes_agg_only=npB + pB,
+        payload_reads_two_pass=2,
+        payload_reads_fused=1,
+        traffic_ratio_fused=(3 * npB + pB) / (2 * npB + pB),
+        traffic_ratio_agg_only=(3 * npB + pB) / (npB + pB),
+    )
+
+
+def _time(fn, reps=3):
+    fn()  # warm (compile / trace)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps * 1e6
 
 
 def run(quiet: bool = False):
     rng = np.random.default_rng(0)
     rows = []
-    # interpret-mode (CPU) payloads; the kernel's BlockSpec tiling targets
+    # interpret-mode (CPU) payloads; the kernels' BlockSpec tiling targets
     # TPU VMEM where the paper's full 1.66M-param CNN payload applies.
     for n, p, dtype in ((70, 32_768, jnp.float32),
                         (70, 8_192, jnp.float32),
@@ -32,28 +70,47 @@ def run(quiet: bool = False):
                         jnp.float32)
         A = A / jnp.clip(A.sum(axis=0, keepdims=True), 1e-6)  # col-stochastic
         X = jnp.asarray(rng.standard_normal((n, p)), dtype)
+        tau = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+        m = jnp.float32(max(1.0, float(tau.sum())))
 
-        ref = mix_ref(A, X)
-        out = mix(A, X)
+        # -- correctness: fused vs the composed two-pass oracle
+        ref_mixed = mix_ref(A, X)
+        ref_agg = np.einsum("i,ip->p", np.asarray(tau, np.float32),
+                            np.asarray(ref_mixed, np.float32)) / float(m)
+        got_mixed, got_agg = mix_aggregate(A, tau, m, X)
         atol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
-        np.testing.assert_allclose(np.asarray(out, np.float32),
-                                   np.asarray(ref, np.float32),
+        np.testing.assert_allclose(np.asarray(got_mixed, np.float32),
+                                   np.asarray(ref_mixed, np.float32),
+                                   rtol=atol, atol=atol)
+        np.testing.assert_allclose(np.asarray(got_agg), ref_agg,
                                    rtol=atol, atol=atol)
 
-        def _time(fn, reps=3):
-            fn()  # warm
-            t0 = time.perf_counter()
-            for _ in range(reps):
-                jax.block_until_ready(fn())
-            return (time.perf_counter() - t0) / reps * 1e6
+        # -- wall time (interpret mode): two-pass vs fused vs agg-only
+        # (jitted like the fused wrapper, so the comparison is end-to-end
+        # schedule vs schedule, not jit-dispatch overhead)
+        @jax.jit
+        def two_pass(A=A, X=X, tau=tau, m=m):
+            mixed = mix(A, X)
+            return jnp.einsum("i,ip->p", tau,
+                              mixed.astype(jnp.float32),
+                              preferred_element_type=jnp.float32) / m
 
         t_ref = _time(lambda: mix_ref(A, X))
-        t_pal = _time(lambda: mix(A, X))
-        rows.append(dict(n=n, p=p, dtype=str(dtype.__name__),
-                         us_ref=t_ref, us_pallas_interp=t_pal, match=True))
+        t_two = _time(two_pass)
+        t_fused = _time(lambda: mix_aggregate(A, tau, m, X))
+        t_agg = _time(lambda: aggregate(A, tau, m, X))
+
+        model = traffic_model(n, p, np.dtype(dtype).itemsize)
+        rows.append(dict(n=n, p=p, dtype=str(np.dtype(dtype).name),
+                         us_ref=t_ref, us_two_pass_interp=t_two,
+                         us_fused_interp=t_fused, us_agg_only_interp=t_agg,
+                         match=True, **model))
         if not quiet:
-            print(f"n={n:3d} p={p:8d} {dtype.__name__:9s} "
-                  f"ref={t_ref:10.1f}us pallas(interp)={t_pal:10.1f}us  OK")
+            print(f"n={n:3d} p={p:8d} {np.dtype(dtype).name:9s} "
+                  f"ref={t_ref:9.1f}us two-pass={t_two:9.1f}us "
+                  f"fused={t_fused:9.1f}us agg-only={t_agg:9.1f}us "
+                  f"traffic x{model['traffic_ratio_fused']:.2f} "
+                  f"(agg-only x{model['traffic_ratio_agg_only']:.2f})  OK")
     return rows
 
 

@@ -6,7 +6,11 @@
   mixing_kernel   -- Pallas D2D-mixing kernel vs oracle
   roofline_table  -- §Roofline terms from dry-run artifacts (if present)
 
-``python -m benchmarks.run [--only NAME] [--fast]``
+``python -m benchmarks.run [--only NAME] [--fast] [--json-out PATH]``
+
+Results are written to ``BENCH_mixing.json`` by default so the perf
+trajectory (fused vs two-pass mixing wall time + bytes-moved model) is
+tracked across PRs; pass ``--json-out ''`` to skip the artifact.
 """
 
 from __future__ import annotations
@@ -27,11 +31,22 @@ def main(argv=None) -> int:
     ap.add_argument("--only", choices=BENCHES)
     ap.add_argument("--fast", action="store_true",
                     help="reduced trial counts / rounds")
-    ap.add_argument("--json-out", default="")
+    ap.add_argument("--json-out", default=None,
+                    help="benchmark artifact path; defaults to "
+                         "BENCH_mixing.json whenever the mixing_kernel "
+                         "bench runs (tracking the perf trajectory across "
+                         "PRs) and to no artifact otherwise; pass '' to "
+                         "disable")
     args = ap.parse_args(argv)
 
     results = {}
     selected = [args.only] if args.only else list(BENCHES)
+    if args.json_out is None:
+        # only default-write the tracked artifact when its contents
+        # actually include the mixing bench (don't clobber it with a
+        # different subset's results)
+        args.json_out = ("BENCH_mixing.json"
+                         if "mixing_kernel" in selected else "")
 
     for name in selected:
         print(f"\n=== {name} " + "=" * (60 - len(name)), flush=True)

@@ -15,6 +15,24 @@ Everything topology- and sampling-dependent (``A``, ``tau``, ``m``, ``eta``)
 enters as *runtime arrays*, so one compiled round serves all rounds of all
 three algorithms (Alg. 1, FedAvg via ``A = I``, COLREL via fixed ``m``).
 
+Steps 2+3 are the memory-bound hot path and come in three interchangeable
+backends (``make_round_fn(..., mixing_backend=...)``):
+
+  'einsum' -- leaf-wise jnp (``mix_deltas`` + ``global_update``); the
+              reference oracle.  fp32 accumulation regardless of delta
+              dtype, matching the Pallas kernels.
+  'pallas' -- leaf-wise Pallas mixing kernel (one launch per leaf) +
+              einsum aggregate.
+  'fused'  -- packed one-pass path: the delta pytree is flattened into a
+              single lane-aligned (n, P_pad) buffer (``repro.fl.packing``)
+              and the fused kernel streams it ONCE, emitting both the
+              mixed deltas (eq. 3) and the tau-weighted aggregate row
+              (eq. 4) in a single launch per round.
+
+``make_scanned_rounds`` wraps the round in ``jax.lax.scan`` over stacked
+``(A_t, tau_t, m_t, eta_t)`` sequences so a K-round trajectory dispatches
+to the device once instead of once per round.
+
 The multi-device shard_map implementation with the same semantics lives in
 ``repro.fl.distributed``; this reference version doubles as its oracle.
 """
@@ -32,11 +50,16 @@ __all__ = [
     "client_deltas",
     "mix_deltas",
     "global_update",
+    "fused_mix_update",
     "make_round_fn",
+    "make_scanned_rounds",
+    "MIXING_BACKENDS",
 ]
 
 PyTree = Any
 LossFn = Callable[[PyTree, PyTree], jnp.ndarray]  # (params, batch) -> scalar
+
+MIXING_BACKENDS = ("einsum", "pallas", "fused")
 
 
 def local_sgd(loss_fn: LossFn, params: PyTree, batches: PyTree,
@@ -71,28 +94,81 @@ def mix_deltas(A: jnp.ndarray, deltas: PyTree) -> PyTree:
     ``A`` is the (n, n) equal-neighbor matrix (block-diagonal over clusters);
     delta leaves have leading axis n.  Linear in the deltas, so applying it
     leaf-wise over the flattened trailing dims is exact.
+
+    Accumulates in fp32 regardless of delta dtype (bf16 deltas are upcast),
+    matching the Pallas kernels' MXU accumulator -- this keeps the einsum
+    path a true oracle for the kernel backends.
     """
     def mix(d):
         flat = d.reshape(d.shape[0], -1)
-        out = jnp.einsum("ij,jp->ip", A, flat,
-                         preferred_element_type=flat.dtype)
-        return out.reshape(d.shape)
+        out = jnp.einsum("ij,jp->ip", A.astype(jnp.float32),
+                         flat.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+        return out.reshape(d.shape).astype(d.dtype)
 
     return jax.tree.map(mix, deltas)
 
 
 def global_update(global_params: PyTree, mixed: PyTree, tau: jnp.ndarray,
                   m: jnp.ndarray) -> PyTree:
-    """PS aggregation (eq. 4): ``x + (1/m) sum_i tau_i Delta_i``."""
+    """PS aggregation (eq. 4): ``x + (1/m) sum_i tau_i Delta_i``.
+
+    fp32 accumulation (see ``mix_deltas``); the result is cast back to
+    the global-param dtype after the add."""
     def upd(g, d):
         flat = d.reshape(d.shape[0], -1)
-        agg = jnp.einsum("i,ip->p", tau.astype(flat.dtype), flat) / m
-        return g + agg.reshape(g.shape).astype(g.dtype)
+        agg = jnp.einsum("i,ip->p", tau.astype(jnp.float32),
+                         flat.astype(jnp.float32),
+                         preferred_element_type=jnp.float32) / m
+        return (g + agg.reshape(g.shape)).astype(g.dtype)
 
     return jax.tree.map(upd, global_params, mixed)
 
 
-def make_round_fn(loss_fn: LossFn, jit: bool = True):
+def fused_mix_update(global_params: PyTree, deltas: PyTree, A: jnp.ndarray,
+                     tau: jnp.ndarray, m: jnp.ndarray, *, chunk: int = 2048,
+                     interpret: bool = True) -> Tuple[PyTree, PyTree]:
+    """One-pass eq. 3 + eq. 4 over the packed delta buffer.
+
+    Packs the delta pytree into a single (n, P_pad) buffer, launches the
+    fused Pallas kernel once (streaming the payload through VMEM a single
+    time), and returns ``(new_global_params, mixed_deltas)``.
+    """
+    # deferred: repro.fl lazily imports back into repro.core at package init
+    from repro.fl import packing
+    from repro.kernels.mixing.ops import mix_aggregate
+
+    spec = packing.pack_spec(deltas)
+    buf = packing.pack(deltas, spec)
+    mixed_buf, agg_row = mix_aggregate(A, tau, m, buf, chunk=chunk,
+                                       interpret=interpret)
+    mixed = packing.unpack(mixed_buf, spec)
+    agg = packing.unpack_row(agg_row, spec)
+    new_global = jax.tree.map(lambda g, a: (g + a).astype(g.dtype),
+                              global_params, agg)
+    return new_global, mixed
+
+
+def _mix_and_update(global_params, deltas, A, tau, m, *, mixing_backend,
+                    chunk, interpret):
+    if mixing_backend == "einsum":
+        mixed = mix_deltas(A, deltas)
+        return global_update(global_params, mixed, tau, m), mixed
+    if mixing_backend == "pallas":
+        from repro.kernels.mixing.ops import mix_pytree
+        mixed = mix_pytree(A, deltas, chunk=chunk, interpret=interpret)
+        return global_update(global_params, mixed, tau, m), mixed
+    if mixing_backend == "fused":
+        return fused_mix_update(global_params, deltas, A, tau, m,
+                                chunk=chunk, interpret=interpret)
+    raise ValueError(
+        f"mixing_backend must be one of {MIXING_BACKENDS}, "
+        f"got {mixing_backend!r}")
+
+
+def make_round_fn(loss_fn: LossFn, jit: bool = True,
+                  mixing_backend: str = "einsum", *, chunk: int = 2048,
+                  interpret: bool = True):
     """Build the jitted global-round function.
 
     Signature: ``round_fn(global_params, client_batches, A, tau, m, eta)``
@@ -101,14 +177,63 @@ def make_round_fn(loss_fn: LossFn, jit: bool = True):
       - tau: (n,) 0/1 sampling indicators; m = tau.sum() (passed explicitly)
     Returns ``(new_global_params, deltas)`` -- deltas exposed for testing and
     communication accounting.
+
+    ``mixing_backend`` selects the eq. 3 + eq. 4 implementation (module
+    docstring); ``chunk``/``interpret`` configure the Pallas backends and
+    are ignored by 'einsum'.
     """
+    if mixing_backend not in MIXING_BACKENDS:
+        raise ValueError(
+            f"mixing_backend must be one of {MIXING_BACKENDS}, "
+            f"got {mixing_backend!r}")
 
     def round_fn(global_params: PyTree, client_batches: PyTree,
                  A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
                  eta: jnp.ndarray) -> Tuple[PyTree, PyTree]:
         deltas = client_deltas(loss_fn, global_params, client_batches, eta)
-        mixed = mix_deltas(A, deltas)
-        new_global = global_update(global_params, mixed, tau, m)
-        return new_global, mixed
+        return _mix_and_update(global_params, deltas, A, tau, m,
+                               mixing_backend=mixing_backend, chunk=chunk,
+                               interpret=interpret)
 
     return jax.jit(round_fn) if jit else round_fn
+
+
+def make_scanned_rounds(loss_fn: LossFn, K: int, jit: bool = True,
+                        mixing_backend: str = "einsum", *,
+                        chunk: int = 2048, interpret: bool = True):
+    """Build a driver that runs ``K`` global rounds in one ``lax.scan``.
+
+    The host builds the whole time-varying topology sequence up front and
+    dispatches to the device once per K rounds instead of once per round:
+
+    ``scanned(global_params, client_batches_seq, A_seq, tau_seq, m_seq,
+    eta_seq) -> (final_params, params_seq)``
+
+      - client_batches_seq leaves: (K, n, T, ...) -- stacked round batches
+      - A_seq (K, n, n), tau_seq (K, n), m_seq (K,), eta_seq (K,)
+      - params_seq leaves: (K, ...) -- the global params after each round
+        (params_seq[K-1] == final_params), so per-round evaluation and
+        ``History`` bookkeeping stay exact.
+
+    The scan body is the *same* composition as ``make_round_fn``'s body,
+    so the trajectory is bitwise-identical to K sequential ``round_fn``
+    calls on the same inputs (asserted in tests/test_fused_mixing.py).
+    """
+    round_fn = make_round_fn(loss_fn, jit=False,
+                             mixing_backend=mixing_backend, chunk=chunk,
+                             interpret=interpret)
+
+    def scanned(global_params: PyTree, client_batches_seq: PyTree,
+                A_seq: jnp.ndarray, tau_seq: jnp.ndarray,
+                m_seq: jnp.ndarray, eta_seq: jnp.ndarray
+                ) -> Tuple[PyTree, PyTree]:
+        def body(params, xs):
+            batches, A, tau, m, eta = xs
+            new_params, _ = round_fn(params, batches, A, tau, m, eta)
+            return new_params, new_params
+
+        xs = (client_batches_seq, A_seq, tau_seq, m_seq, eta_seq)
+        final, params_seq = jax.lax.scan(body, global_params, xs, length=K)
+        return final, params_seq
+
+    return jax.jit(scanned) if jit else scanned

@@ -11,6 +11,17 @@ The server is host-side control logic around the jitted round function of
 
 All three share the same compiled round; they differ only in the runtime
 ``A``/``tau``/``m`` fed to it -- which is exactly the paper's framing.
+
+Two performance knobs thread through to ``repro.core.rounds``:
+
+* ``mixing_backend`` ('einsum' | 'pallas' | 'fused') selects the eq. 3+4
+  implementation -- 'fused' packs the delta pytree into one flat buffer
+  and streams it through the fused Pallas kernel once per round.
+* ``scan_rounds=True`` plans all ``t_max`` rounds up front (topology
+  sampling and batch draws are host-side and param-independent) and runs
+  them in a single ``lax.scan`` dispatch via ``make_scanned_rounds``;
+  per-round params are emitted by the scan, so ``History`` records and
+  eval cadence are unchanged.
 """
 
 from __future__ import annotations
@@ -18,6 +29,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -26,7 +38,7 @@ from .adjacency import network_matrix
 from .bounds import exact_phi_ell, phi_ell_bound_from_stats
 from .graphs import D2DNetwork
 from .metrics import CommLedger, count_d2d_transmissions
-from .rounds import make_round_fn
+from .rounds import MIXING_BACKENDS, make_round_fn, make_scanned_rounds
 
 __all__ = ["ServerConfig", "RoundRecord", "History", "FederatedServer"]
 
@@ -88,17 +100,26 @@ class FederatedServer:
 
     def __init__(self, network: D2DNetwork, loss_fn, init_params: PyTree,
                  batch_sampler: BatchSampler, config: ServerConfig,
-                 algorithm: str = "semidec", jit: bool = True):
+                 algorithm: str = "semidec", jit: bool = True,
+                 mixing_backend: str = "einsum", scan_rounds: bool = False):
         if algorithm not in ALGORITHMS:
             raise ValueError(f"algorithm must be one of {ALGORITHMS}")
         if algorithm in ("fedavg", "colrel") and config.m_fixed is None:
             raise ValueError(f"{algorithm} requires config.m_fixed")
+        if mixing_backend not in MIXING_BACKENDS:
+            raise ValueError(
+                f"mixing_backend must be one of {MIXING_BACKENDS}")
         self.network = network
         self.config = config
         self.algorithm = algorithm
         self.params = init_params
         self.batch_sampler = batch_sampler
-        self.round_fn = make_round_fn(loss_fn, jit=jit)
+        self.mixing_backend = mixing_backend
+        self.scan_rounds = scan_rounds
+        self._loss_fn = loss_fn
+        self._jit = jit
+        self.round_fn = make_round_fn(loss_fn, jit=jit,
+                                      mixing_backend=mixing_backend)
         self.rng = np.random.default_rng(config.seed)
         self._m_next = (config.m_fixed if algorithm != "semidec"
                         else (config.m0 or network.n))
@@ -144,6 +165,8 @@ class FederatedServer:
 
     def run(self, eval_fn: Optional[EvalFn] = None,
             eval_every: int = 1) -> History:
+        if self.scan_rounds:
+            return self._run_scanned(eval_fn, eval_every)
         cfg = self.config
         history = History(algorithm=self.algorithm,
                           ledger=CommLedger(energy_ratio=cfg.energy_ratio))
@@ -165,6 +188,50 @@ class FederatedServer:
                                         or t == cfg.t_max - 1):
                 rec.metrics = {k: float(v)
                                for k, v in eval_fn(self.params).items()}
+            history.records.append(rec)
+            history.ledger.add_round(d2s=m_actual, d2d=d2d)
+        return history
+
+    def _run_scanned(self, eval_fn: Optional[EvalFn],
+                     eval_every: int) -> History:
+        """Single-dispatch variant: plan every round host-side (topology
+        sampling, m(t) adaptation, and batch draws are all
+        param-independent -- the rng consumption order matches ``run``),
+        stack the per-round inputs, and execute all ``t_max`` rounds in
+        one ``lax.scan``.  The scan emits the params after every round,
+        so ``History`` records and eval cadence are identical to the
+        sequential driver."""
+        cfg = self.config
+        history = History(algorithm=self.algorithm,
+                          ledger=CommLedger(energy_ratio=cfg.energy_ratio))
+        plans, batch_list = [], []
+        for t in range(cfg.t_max):
+            plan = self._plan_round(t)
+            plans.append(plan)
+            batch_list.append(self.batch_sampler(self.rng, t))
+
+        A_seq = jnp.stack([jnp.asarray(p[0], jnp.float32) for p in plans])
+        tau_seq = jnp.stack([jnp.asarray(p[1], jnp.float32) for p in plans])
+        m_seq = jnp.asarray([float(p[3]) for p in plans], jnp.float32)
+        eta_seq = jnp.asarray([float(cfg.eta(t)) for t in range(cfg.t_max)],
+                              jnp.float32)
+        batches_seq = jax.tree.map(lambda *bs: jnp.stack(bs), *batch_list)
+
+        scanned = make_scanned_rounds(self._loss_fn, cfg.t_max,
+                                      jit=self._jit,
+                                      mixing_backend=self.mixing_backend)
+        self.params, params_seq = scanned(self.params, batches_seq, A_seq,
+                                          tau_seq, m_seq, eta_seq)
+
+        for t, (_, _, m, m_actual, d2d, psi_bound) in enumerate(plans):
+            rec = RoundRecord(t=t, m=m, m_actual=m_actual,
+                              psi_bound=psi_bound, d2s=m_actual, d2d=d2d,
+                              eta=float(cfg.eta(t)))
+            if eval_fn is not None and (t % eval_every == 0
+                                        or t == cfg.t_max - 1):
+                params_t = jax.tree.map(lambda x: x[t], params_seq)
+                rec.metrics = {k: float(v)
+                               for k, v in eval_fn(params_t).items()}
             history.records.append(rec)
             history.ledger.add_round(d2s=m_actual, d2d=d2d)
         return history

@@ -4,6 +4,8 @@ single-host oracle with identical semantics."""
 
 from .distributed import (make_train_step, make_prefill_step,
                           make_decode_step, build_topology_inputs)
+from .packing import PackSpec, pack, pack_spec, unpack, unpack_row
 
 __all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
-           "build_topology_inputs"]
+           "build_topology_inputs", "PackSpec", "pack", "pack_spec",
+           "unpack", "unpack_row"]

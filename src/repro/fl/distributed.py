@@ -21,6 +21,15 @@ step serves every round of Algorithm 1, FedAvg (A=I) and COLREL (fixed m).
                    (O(n) memory blowup; the naive schedule).
        'einsum' -- jit-level dense matmul over the stacked client axis
                    (XLA chooses the schedule; paper eq. (3) verbatim).
+       'fused'  -- jit-level one-pass sibling of 'einsum': packs the
+                   delta pytree into a single lane-aligned (n, P) buffer
+                   (``repro.fl.packing``) and applies the algebraic
+                   identity ``sum_i tau_i (A X)_i = (tau^T A) X`` so the
+                   payload is read ONCE and the mixed deltas are never
+                   materialized (the train step only returns the new
+                   global params).  GSPMD shards the packed matmul; a
+                   manually worker-sharded fused path is a ROADMAP open
+                   item.
   4. D2S        -- ``psum`` of ``tau_i * Delta_i`` over (pod, data) --
      the expensive cross-pod collective -- scaled by 1/m (paper eq. (4)).
 """
@@ -47,7 +56,7 @@ PyTree = Any
 __all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
            "build_topology_inputs", "MIXINGS"]
 
-MIXINGS = ("ring", "gather", "einsum")
+MIXINGS = ("ring", "gather", "einsum", "fused")
 
 
 def _shardings(mesh, specs: PyTree) -> PyTree:
@@ -95,19 +104,42 @@ def _mix_and_aggregate(mesh, mixing: str, deltas: PyTree, A: jnp.ndarray,
 
     if mixing == "einsum":
         # paper eq. (3) verbatim at the jit level; XLA picks the schedule.
+        # fp32 accumulation matches the single-host oracle and the
+        # Pallas kernels (repro.core.rounds docstring).
         def mix(d):
             flat = d.reshape(n, -1)
-            out = jnp.einsum("ij,jp->ip", A.astype(flat.dtype), flat)
-            return out.reshape(d.shape)
+            out = jnp.einsum("ij,jp->ip", A.astype(jnp.float32),
+                             flat.astype(jnp.float32),
+                             preferred_element_type=jnp.float32)
+            return out.reshape(d.shape).astype(d.dtype)
 
         mixed = jax.tree.map(mix, deltas)
 
         def upd(g, d):
             flat = d.reshape(n, -1)
-            agg = jnp.einsum("i,ip->p", tau.astype(flat.dtype), flat) / m
+            agg = jnp.einsum("i,ip->p", tau.astype(jnp.float32),
+                             flat.astype(jnp.float32),
+                             preferred_element_type=jnp.float32) / m
             return (g + agg.reshape(g.shape)).astype(g.dtype)
 
         return jax.tree.map(upd, global_params, mixed)
+
+    if mixing == "fused":
+        # one-pass sibling of 'einsum': sum_i tau_i (A X)_i = (tau^T A) X.
+        # The packed buffer is read once and the (n, P) mixed intermediate
+        # is never formed -- the train step only needs the new global.
+        from repro.fl import packing
+
+        spec = packing.pack_spec(deltas)
+        buf = packing.pack(deltas, spec)                   # (n, P_pad)
+        w = jnp.einsum("i,ij->j", tau.astype(jnp.float32),
+                       A.astype(jnp.float32),
+                       preferred_element_type=jnp.float32) / m
+        agg_row = jnp.einsum("j,jp->p", w, buf.astype(jnp.float32),
+                             preferred_element_type=jnp.float32)
+        agg = packing.unpack_row(agg_row, spec)
+        return jax.tree.map(lambda g, a: (g + a).astype(g.dtype),
+                            global_params, agg)
 
     gspecs = shard_rules.param_specs(global_params, msize)
     if zero:

@@ -1,0 +1,121 @@
+"""Packed client-delta layout: one flat lane-aligned buffer per round.
+
+The round's D2D/D2S hot path is linear algebra over the *concatenation*
+of every client's flattened delta, but the deltas live as a pytree, so a
+leaf-wise implementation pays one pad -> kernel launch -> slice cycle per
+leaf (dozens for an LM).  This module flattens the whole tree into a
+single ``(n, P_pad)`` buffer -- P_pad lane-aligned (multiple of 128) --
+so the fused mixing kernel launches **once per round** regardless of the
+tree's shape, and caches the offset/shape metadata per tree structure so
+repeated rounds pay zero host-side re-planning.
+
+    spec  = pack_spec(deltas)          # cached per (treedef, shapes, ...)
+    buf   = pack(deltas, spec)         # (n, P_pad), one concat
+    tree  = unpack(buf, spec)          # exact inverse (slices + reshapes)
+    tree1 = unpack_row(row, spec)      # (P,) aggregate row -> param tree
+
+``pack``/``unpack`` are pure jnp and jit-safe (the spec is static
+metadata); under jit XLA fuses the concat/slice with neighbors, and the
+packed buffer is the layout the Pallas kernel streams directly.
+
+Mixed-dtype trees pack at ``jnp.result_type`` of the leaves (``unpack``
+restores per-leaf dtypes exactly): a mostly-bf16 tree with a few fp32
+leaves therefore streams as fp32, inflating payload bytes.  Per-dtype
+buffer groups are a ROADMAP open item; for the traffic numbers in
+BENCH_mixing.json to transfer, keep delta trees dtype-homogeneous.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["PackSpec", "pack_spec", "pack", "unpack", "unpack_row"]
+
+_LANE = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class PackSpec:
+    """Static layout metadata for a packed delta tree.
+
+    ``shapes``/``dtypes`` are per-leaf trailing shapes (client axis
+    stripped) and dtypes in treedef order; ``offsets[i]:offsets[i]+sizes[i]``
+    is leaf i's column range in the packed buffer.
+    """
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    offsets: Tuple[int, ...]
+    sizes: Tuple[int, ...]
+    total: int          # P   -- sum of leaf sizes
+    padded: int         # P_pad -- lane-aligned packed width
+    dtype: Any          # packed buffer dtype (result_type of the leaves)
+
+    @property
+    def pad(self) -> int:
+        return self.padded - self.total
+
+
+_SPEC_CACHE: Dict[Any, PackSpec] = {}
+
+
+def pack_spec(deltas: PyTree, *, align: int = _LANE) -> PackSpec:
+    """Build (or fetch the cached) layout spec for a per-client delta tree
+    whose leaves share a leading client axis ``n``."""
+    leaves, treedef = jax.tree.flatten(deltas)
+    if not leaves:
+        raise ValueError("pack_spec: empty delta tree")
+    shapes = tuple(tuple(l.shape[1:]) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    key = (treedef, shapes, dtypes, align)
+    spec = _SPEC_CACHE.get(key)
+    if spec is not None:
+        return spec
+    sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
+    offsets = tuple(int(o) for o in np.cumsum((0,) + sizes[:-1]))
+    total = int(sum(sizes))
+    padded = ((total + align - 1) // align) * align
+    spec = PackSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                    offsets=offsets, sizes=sizes, total=total,
+                    padded=padded, dtype=jnp.result_type(*dtypes))
+    _SPEC_CACHE[key] = spec
+    return spec
+
+
+def pack(deltas: PyTree, spec: PackSpec) -> jnp.ndarray:
+    """Flatten the delta tree into the (n, P_pad) packed buffer."""
+    leaves = jax.tree.leaves(deltas)
+    n = leaves[0].shape[0]
+    flat = [l.reshape(n, -1).astype(spec.dtype) for l in leaves]
+    if spec.pad:
+        flat.append(jnp.zeros((n, spec.pad), spec.dtype))
+    return jnp.concatenate(flat, axis=1)
+
+
+def unpack(buf: jnp.ndarray, spec: PackSpec) -> PyTree:
+    """Inverse of ``pack``: (n, P_pad) -> delta tree (leading axis n)."""
+    n = buf.shape[0]
+    leaves = [
+        buf[:, o:o + s].reshape((n,) + shp).astype(dt)
+        for o, s, shp, dt in zip(spec.offsets, spec.sizes, spec.shapes,
+                                 spec.dtypes)
+    ]
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def unpack_row(row: jnp.ndarray, spec: PackSpec) -> PyTree:
+    """Unpack a single packed row (P,) or (P_pad,) -- e.g. the fused
+    kernel's aggregate -- into a tree of per-leaf trailing shapes (no
+    client axis).  Keeps the row dtype (fp32 accumulator) untouched."""
+    leaves = [
+        row[o:o + s].reshape(shp)
+        for o, s, shp in zip(spec.offsets, spec.sizes, spec.shapes)
+    ]
+    return jax.tree.unflatten(spec.treedef, leaves)

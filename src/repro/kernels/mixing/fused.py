@@ -1,0 +1,126 @@
+"""Fused one-pass Pallas kernel: D2D mix + D2S aggregate (paper eq. 3 + 4).
+
+The per-round hot path is two back-to-back memory-bound passes over the
+full client-delta payload ``X`` (n clients x p model dims):
+
+    mixed = A @ X                       (eq. 3, D2D consensus)
+    agg   = (1/m) sum_i tau_i mixed_i   (eq. 4, D2S aggregate)
+
+At arithmetic intensity ~n flops/byte the HBM traffic *is* the round
+time, and the two-pass schedule reads the payload twice (X for the mix,
+mixed again for the aggregate).  Both equations are linear in ``X``, so
+
+    agg = (tau^T A) @ X / m  =  w @ X,      w := (tau^T A) / m  (1, n)
+
+and one streaming pass suffices: the grid walks payload chunks (the p
+axis); each step loads an (n, pc) tile of ``X`` into VMEM **once**, keeps
+``A`` (and the tiny precombined row ``w``) resident, and emits
+
+  * the mixed tile ``A @ X_tile``            -- (n, pc), payload dtype
+  * the aggregate row ``w @ X_tile``         -- (1, pc), float32
+
+with float32 MXU accumulation for both regardless of payload dtype.
+
+Two entry points:
+
+``mix_aggregate_pallas``
+    emits both outputs; HBM traffic ~2 n p B (read X once, write mixed +
+    the (1, p) aggregate row) vs ~3 n p B for mix-then-aggregate.
+
+``aggregate_pallas``
+    exploits the identity to skip the mixed output entirely and write
+    only the (1, p) row -- traffic ~n p B.  This is the right kernel for
+    FedAvg (``A = I`` makes ``mixed`` redundant) and for server rounds
+    that do not log per-client deltas.
+
+Shape contract matches ``mixing.mix_pallas``: callers (``ops.py``) pad
+``n`` to the float32 sublane multiple and ``p`` to a multiple of
+``chunk``; ``w`` arrives padded to ``(_SUBLANE, n_pad)`` with the real
+weights in row 0.  Validated in interpret mode on CPU against the
+composed ``mix_ref`` + eq.-4 oracle (tests/test_fused_mixing.py);
+compiled TPU dispatch (``interpret=False``) is a ROADMAP open item.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["mix_aggregate_pallas", "aggregate_pallas"]
+
+
+def _fused_kernel(a_ref, w_ref, x_ref, mixed_ref, agg_ref):
+    a = a_ref[...].astype(jnp.float32)          # (n_pad, n_pad), resident
+    w = w_ref[...].astype(jnp.float32)          # (s, n_pad), resident
+    x = x_ref[...].astype(jnp.float32)          # (n_pad, pc) -- read ONCE
+    dims = (((1,), (0,)), ((), ()))
+    mixed_ref[...] = jax.lax.dot_general(
+        a, x, dims, preferred_element_type=jnp.float32).astype(mixed_ref.dtype)
+    agg_ref[...] = jax.lax.dot_general(
+        w, x, dims, preferred_element_type=jnp.float32)
+
+
+def _agg_kernel(w_ref, x_ref, agg_ref):
+    w = w_ref[...].astype(jnp.float32)          # (s, n_pad), resident
+    x = x_ref[...].astype(jnp.float32)          # (n_pad, pc) -- read ONCE
+    agg_ref[...] = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+def mix_aggregate_pallas(A: jnp.ndarray, w: jnp.ndarray, X: jnp.ndarray, *,
+                         chunk: int = 2048, interpret: bool = True):
+    """One-pass fused mix + aggregate on hardware-aligned shapes.
+
+    A (n_pad, n_pad); w (s, n_pad) with the precombined ``tau^T A / m``
+    row in w[0]; X (n_pad, p_pad), p_pad % chunk == 0.  Returns
+    ``(mixed, agg)``: (n_pad, p_pad) in X.dtype and (s, p_pad) float32.
+    Padding/unpadding is the wrapper's job (ops.py).
+    """
+    n, p = X.shape
+    s = w.shape[0]
+    assert A.shape == (n, n), (A.shape, X.shape)
+    assert w.shape == (s, n), (w.shape, X.shape)
+    assert p % chunk == 0, (p, chunk)
+    grid = (p // chunk,)
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),        # A resident
+            pl.BlockSpec((s, n), lambda i: (0, 0)),        # w resident
+            pl.BlockSpec((n, chunk), lambda i: (0, i)),    # stream X once
+        ],
+        out_specs=[
+            pl.BlockSpec((n, chunk), lambda i: (0, i)),
+            pl.BlockSpec((s, chunk), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, p), X.dtype),
+            jax.ShapeDtypeStruct((s, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(A, w, X)
+
+
+def aggregate_pallas(w: jnp.ndarray, X: jnp.ndarray, *, chunk: int = 2048,
+                     interpret: bool = True) -> jnp.ndarray:
+    """Aggregate-only variant: ``w @ X`` without materializing the mixed
+    deltas (``sum_i tau_i (A X)_i = (tau^T A) X``).  w (s, n_pad) with the
+    real row in w[0]; X (n_pad, p_pad).  Returns (s, p_pad) float32."""
+    n, p = X.shape
+    s = w.shape[0]
+    assert w.shape == (s, n), (w.shape, X.shape)
+    assert p % chunk == 0, (p, chunk)
+    grid = (p // chunk,)
+    return pl.pallas_call(
+        _agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s, n), lambda i: (0, 0)),        # w resident
+            pl.BlockSpec((n, chunk), lambda i: (0, i)),    # stream X once
+        ],
+        out_specs=pl.BlockSpec((s, chunk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((s, p), jnp.float32),
+        interpret=interpret,
+    )(w, X)

@@ -17,6 +17,11 @@ streaming ``X`` through VMEM exactly once:
 
 Validated in interpret mode on CPU against ``ref.mix_ref`` (see
 tests/test_kernels.py); TPU is the target for the compiled path.
+
+``fused.py`` extends this design to a one-pass mix *plus* D2S aggregate
+(eq. 3 + eq. 4 from a single streaming read of ``X``) -- prefer it on the
+round hot path (``make_round_fn(..., mixing_backend='fused')``); this
+mix-only kernel remains for the 'pallas' leaf-wise backend and ablations.
 """
 
 from __future__ import annotations

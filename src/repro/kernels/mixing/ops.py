@@ -1,20 +1,34 @@
-"""Jitted wrapper for the graph-mixing kernel: shape padding, pytree
-plumbing, and backend dispatch (interpret on CPU, compiled on TPU)."""
+"""Jitted wrappers for the graph-mixing kernels: shape padding, pytree
+plumbing, and backend dispatch (interpret on CPU, compiled on TPU).
+
+Entry points:
+
+* ``mix`` / ``mix_pytree``       -- eq. 3 only (``Delta = A @ X``).
+* ``mix_aggregate``              -- fused one-pass eq. 3 + eq. 4: mixed
+                                    deltas plus the tau-weighted D2S
+                                    aggregate row from a single streaming
+                                    read of the payload.
+* ``aggregate``                  -- aggregate-only fast path exploiting
+                                    ``sum_i tau_i (A X)_i = (tau^T A) X``
+                                    (FedAvg ``A = I``, or rounds that do
+                                    not need per-client mixed deltas).
+"""
 
 from __future__ import annotations
 
 import functools
-from typing import Any
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from .fused import aggregate_pallas, mix_aggregate_pallas
 from .mixing import mix_pallas
 from .ref import mix_ref
 
 PyTree = Any
 
-__all__ = ["mix", "mix_pytree"]
+__all__ = ["mix", "mix_pytree", "mix_aggregate", "aggregate"]
 
 _LANE = 128
 _SUBLANE = 8
@@ -24,16 +38,32 @@ def _pad_to(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def mix(A: jnp.ndarray, X: jnp.ndarray, *, chunk: int = 2048,
-        interpret: bool = True) -> jnp.ndarray:
-    """Delta = A @ X for arbitrary (n, p); pads to TPU tile alignment,
-    runs the Pallas kernel, and slices back."""
+def _pad_inputs(A, X, chunk):
+    """Pad (A, X) to TPU tile alignment; returns (A_p, X_p, n, p)."""
     n, p = X.shape
     n_pad = _pad_to(n, _SUBLANE)
     p_pad = _pad_to(p, chunk)
     A_p = jnp.zeros((n_pad, n_pad), A.dtype).at[:n, :n].set(A)
     X_p = jnp.zeros((n_pad, p_pad), X.dtype).at[:n, :p].set(X)
+    return A_p, X_p, n, p
+
+
+def _weight_row(A, tau, m, n_pad):
+    """Precombined D2S row ``w = (tau^T A) / m`` (fp32), padded to the
+    sublane multiple with the real weights in row 0."""
+    w = jnp.einsum("i,ij->j", tau.astype(jnp.float32),
+                   A.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) / m
+    n = w.shape[0]
+    return jnp.zeros((_SUBLANE, n_pad), jnp.float32).at[0, :n].set(w)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mix(A: jnp.ndarray, X: jnp.ndarray, *, chunk: int = 2048,
+        interpret: bool = True) -> jnp.ndarray:
+    """Delta = A @ X for arbitrary (n, p); pads to TPU tile alignment,
+    runs the Pallas kernel, and slices back."""
+    A_p, X_p, n, p = _pad_inputs(A, X, chunk)
     out = mix_pallas(A_p, X_p, chunk=chunk, interpret=interpret)
     return out[:n, :p]
 
@@ -41,10 +71,45 @@ def mix(A: jnp.ndarray, X: jnp.ndarray, *, chunk: int = 2048,
 def mix_pytree(A: jnp.ndarray, deltas: PyTree, *, chunk: int = 2048,
                interpret: bool = True) -> PyTree:
     """Apply the mixing kernel to a pytree of per-client deltas (leaves with
-    leading client axis n), flattening trailing dims per leaf."""
+    leading client axis n), flattening trailing dims per leaf.
+
+    One kernel launch *per leaf*; the packed fused path
+    (``repro.fl.packing`` + ``mix_aggregate``) replaces this loop with a
+    single launch per round."""
     def one(d):
         flat = d.reshape(d.shape[0], -1)
         return mix(A, flat, chunk=chunk,
                    interpret=interpret).reshape(d.shape)
 
     return jax.tree.map(one, deltas)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mix_aggregate(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
+                  X: jnp.ndarray, *, chunk: int = 2048,
+                  interpret: bool = True
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused eq. 3 + eq. 4 over an arbitrary (n, p) payload.
+
+    Returns ``(mixed, agg)``: mixed (n, p) in X.dtype and the float32
+    aggregate row agg (p,) = ``(1/m) sum_i tau_i (A @ X)_i``, computed
+    from one streaming pass over ``X``.
+    """
+    A_p, X_p, n, p = _pad_inputs(A, X, chunk)
+    w_p = _weight_row(A, tau, m, A_p.shape[0])
+    mixed, agg = mix_aggregate_pallas(A_p, w_p, X_p, chunk=chunk,
+                                      interpret=interpret)
+    return mixed[:n, :p], agg[0, :p]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def aggregate(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
+              X: jnp.ndarray, *, chunk: int = 2048,
+              interpret: bool = True) -> jnp.ndarray:
+    """Aggregate-only fast path: the float32 row
+    ``(1/m) sum_i tau_i (A @ X)_i = ((tau^T A) / m) @ X`` (p,), reading
+    ``X`` once and never materializing the mixed deltas."""
+    A_p, X_p, n, p = _pad_inputs(A, X, chunk)
+    w_p = _weight_row(A, tau, m, A_p.shape[0])
+    agg = aggregate_pallas(w_p, X_p, chunk=chunk, interpret=interpret)
+    return agg[0, :p]

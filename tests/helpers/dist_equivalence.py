@@ -52,7 +52,7 @@ def main() -> None:
     batches = (toks[..., :-1], toks[..., 1:])
     ref_new, _ = ref_fn(params, batches, A, tau, m, eta)
 
-    for mixing in ("ring", "gather", "einsum"):
+    for mixing in ("ring", "gather", "einsum", "fused"):
         step = make_train_step(cfg, mesh, mixing=mixing)
         with jax.set_mesh(mesh):
             got = step(params, toks, A, tau, m, eta)

@@ -4,7 +4,7 @@ correct and monotone."""
 
 import numpy as np
 import pytest
-from hypothesis import assume, given, settings, strategies as st
+from hypothesis_compat import assume, given, settings, strategies as st
 
 from repro.core import (D2DNetwork, connectivity_factor, degree_stats,
                         delete_edge_fraction, equal_neighbor_matrix,

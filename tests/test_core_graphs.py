@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (D2DNetwork, degree_stats, delete_edge_fraction,
                         ensure_positive_out_degree, equal_neighbor_matrix,

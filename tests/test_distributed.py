@@ -18,6 +18,13 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 HELPERS = os.path.join(REPO, "tests", "helpers")
 
+# The subprocess helpers drive the mesh runtime through jax.set_mesh /
+# jax.shard_map; on older jax (< 0.7) those APIs don't exist, so the
+# multi-device equivalence checks cannot run at all -- skip, don't fail.
+needs_mesh_api = pytest.mark.skipif(
+    not (hasattr(jax, "set_mesh") and hasattr(jax, "shard_map")),
+    reason="mesh runtime requires jax.set_mesh/jax.shard_map")
+
 
 def _run(args, env_extra=None, timeout=560):
     env = dict(os.environ)
@@ -32,12 +39,13 @@ def _run(args, env_extra=None, timeout=560):
 # ---------------------------------------------------------------------------
 
 @pytest.mark.slow
+@needs_mesh_api
 def test_mesh_train_step_matches_reference():
     r = _run([os.path.join(HELPERS, "dist_equivalence.py")],
              env_extra={"XLA_FLAGS":
                         "--xla_force_host_platform_device_count=8"})
     assert r.returncode == 0, r.stdout + r.stderr
-    for mixing in ("ring", "gather", "einsum"):
+    for mixing in ("ring", "gather", "einsum", "fused"):
         assert f"OK mixing={mixing}" in r.stdout
     assert "OK zero" in r.stdout
     assert "OK shardmap" in r.stdout
@@ -46,6 +54,7 @@ def test_mesh_train_step_matches_reference():
 
 
 @pytest.mark.slow
+@needs_mesh_api
 def test_sp_mlp_matches_plain():
     r = _run([os.path.join(HELPERS, "sp_mlp_equivalence.py")],
              env_extra={"XLA_FLAGS":
@@ -55,6 +64,7 @@ def test_sp_mlp_matches_plain():
 
 
 @pytest.mark.slow
+@needs_mesh_api
 def test_expert_parallel_moe_matches_oracle():
     r = _run([os.path.join(HELPERS, "moe_ep_equivalence.py")],
              env_extra={"XLA_FLAGS":
@@ -65,6 +75,7 @@ def test_expert_parallel_moe_matches_oracle():
 
 
 @pytest.mark.slow
+@needs_mesh_api
 def test_mesh_serve_steps_match_reference():
     r = _run([os.path.join(HELPERS, "serve_equivalence.py")],
              env_extra={"XLA_FLAGS":
@@ -79,6 +90,7 @@ def test_mesh_serve_steps_match_reference():
 # ---------------------------------------------------------------------------
 
 @pytest.mark.slow
+@needs_mesh_api
 def test_dryrun_driver_writes_artifact(tmp_path):
     out = str(tmp_path / "dry")
     r = _run(["-m", "repro.launch.dryrun", "--arch", "stablelm-1.6b",
@@ -222,7 +234,7 @@ def test_zero_specs_shards_first_divisible_dim():
     assert tuple(out["tiny"]) == (None, None)
 
 
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from hypothesis_compat import given, settings, st  # noqa: E402
 
 
 @settings(max_examples=40, deadline=None)

@@ -1,0 +1,300 @@
+"""Fused one-pass mix+aggregate path: kernel parity vs the composed
+two-pass oracle (``mix_ref`` then eq.-4 update), packed-layout round
+trips, backend-parity of the round function, and the scanned multi-round
+driver's bitwise identity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, strategies as st
+
+from repro.core import (D2DNetwork, FederatedServer, ServerConfig,
+                        client_deltas, global_update, make_round_fn,
+                        make_scanned_rounds, mix_deltas, network_matrix)
+from repro.fl import packing
+from repro.kernels.mixing.ops import aggregate, mix_aggregate
+from repro.kernels.mixing.ref import mix_ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# oracle: the two-pass schedule the fused kernel replaces
+# ---------------------------------------------------------------------------
+
+def _two_pass(A, tau, m, X):
+    """mix_ref (eq. 3) then the eq.-4 aggregate, fp32 accumulation."""
+    mixed = mix_ref(A, X)
+    agg = np.einsum("i,ip->p", np.asarray(tau, np.float32),
+                    np.asarray(mixed, np.float32)) / float(m)
+    return mixed, agg
+
+
+def _check(n, p, dtype, seed, chunk=512):
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.random((n, n)), jnp.float32)
+    X = jnp.asarray(rng.standard_normal((n, p)), dtype)
+    tau = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+    m = jnp.float32(max(1.0, float(tau.sum())))
+    mixed, agg = mix_aggregate(A, tau, m, X, chunk=chunk)
+    want_mixed, want_agg = _two_pass(A, tau, m, X)
+    assert mixed.dtype == X.dtype
+    assert agg.dtype == jnp.float32
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(mixed, np.float32),
+                               np.asarray(want_mixed, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(agg), want_agg,
+                               rtol=tol, atol=tol)
+    # aggregate-only variant: same row, no mixed output
+    agg2 = aggregate(A, tau, m, X, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(agg2), want_agg,
+                               rtol=tol, atol=tol)
+
+
+@given(st.integers(2, 40), st.integers(1, 5000),
+       st.sampled_from([jnp.float32, jnp.bfloat16]),
+       st.integers(0, 2**31))
+@settings(max_examples=25, deadline=None)
+def test_fused_matches_two_pass_oracle(n, p, dtype, seed):
+    _check(n, p, dtype, seed)
+
+
+@pytest.mark.parametrize("n,p,dtype", [
+    (7, 1000, jnp.float32),      # non-tile-aligned n and p
+    (13, 4097, jnp.float32),     # p just past a lane multiple
+    (3, 129, jnp.bfloat16),
+    (8, 512, jnp.bfloat16),      # aligned shapes
+    (1, 33, jnp.float32),        # single-client cluster
+])
+def test_fused_matches_two_pass_fixed_shapes(n, p, dtype):
+    _check(n, p, dtype, seed=0)
+
+
+def test_fused_identity_mixing_fedavg():
+    """A = I (FedAvg): mixed == X and agg == mean of sampled rows."""
+    rng = np.random.default_rng(3)
+    n, p = 9, 700
+    X = jnp.asarray(rng.standard_normal((n, p)), jnp.float32)
+    tau = jnp.asarray([1, 0, 1, 1, 0, 1, 0, 0, 1], jnp.float32)
+    m = jnp.float32(5.0)
+    mixed, agg = mix_aggregate(jnp.eye(n), tau, m, X, chunk=256)
+    np.testing.assert_allclose(np.asarray(mixed), np.asarray(X),
+                               rtol=1e-6, atol=1e-6)
+    want = np.asarray(X)[np.asarray(tau) > 0].sum(0) / 5.0
+    np.testing.assert_allclose(np.asarray(agg), want, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_tau_all_zeros():
+    """No client sampled: the aggregate row is exactly zero (m is clamped
+    host-side; the kernel itself must produce 0, not NaN)."""
+    rng = np.random.default_rng(4)
+    n, p = 6, 300
+    A = jnp.asarray(rng.random((n, n)), jnp.float32)
+    X = jnp.asarray(rng.standard_normal((n, p)), jnp.float32)
+    _, agg = mix_aggregate(A, jnp.zeros(n), jnp.float32(1.0), X, chunk=256)
+    np.testing.assert_array_equal(np.asarray(agg), np.zeros(p))
+
+
+def test_fused_real_topology_preserves_sum():
+    """Column-stochastic A + full sampling: agg == column mean of X."""
+    rng = np.random.default_rng(5)
+    net = D2DNetwork(n=20, c=2, p_fail=0.15)
+    A = jnp.asarray(network_matrix(net.sample(rng), 20), jnp.float32)
+    X = jnp.asarray(rng.standard_normal((20, 1025)), jnp.float32)
+    _, agg = mix_aggregate(A, jnp.ones(20), jnp.float32(20.0), X, chunk=256)
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(X).mean(0),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# packed delta layout
+# ---------------------------------------------------------------------------
+
+def _tree(rng, n, dtype=jnp.float32):
+    return {"w": jnp.asarray(rng.standard_normal((n, 3, 5)), dtype),
+            "b": jnp.asarray(rng.standard_normal((n, 7)), dtype),
+            "scalarish": jnp.asarray(rng.standard_normal((n, 1)), dtype)}
+
+
+def test_pack_unpack_round_trip():
+    rng = np.random.default_rng(6)
+    tree = _tree(rng, 11)
+    spec = packing.pack_spec(tree)
+    buf = packing.pack(tree, spec)
+    assert buf.shape == (11, spec.padded)
+    assert spec.padded % 128 == 0 and spec.padded >= spec.total
+    back = packing.unpack(buf, spec)
+    for k in tree:
+        assert back[k].dtype == tree[k].dtype
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+
+
+def test_pack_spec_is_cached_and_row_unpack_matches():
+    rng = np.random.default_rng(7)
+    t1, t2 = _tree(rng, 4), _tree(rng, 4)
+    s1, s2 = packing.pack_spec(t1), packing.pack_spec(t2)
+    assert s1 is s2                       # cached per (treedef, shapes, ...)
+    row = jnp.arange(s1.total, dtype=jnp.float32)
+    tree = packing.unpack_row(row, s1)
+    assert tree["w"].shape == (3, 5) and tree["b"].shape == (7,)
+    flat = np.concatenate([np.asarray(l).ravel()
+                           for l in jax.tree.leaves(tree)])
+    np.testing.assert_array_equal(flat, np.asarray(row))
+
+
+@given(st.lists(st.integers(1, 40), min_size=1, max_size=6),
+       st.integers(1, 9),
+       st.sampled_from([jnp.float32, jnp.bfloat16]),
+       st.integers(0, 2**31))
+@settings(max_examples=25, deadline=None)
+def test_pack_round_trip_property(sizes, n, dtype, seed):
+    rng = np.random.default_rng(seed)
+    tree = [jnp.asarray(rng.standard_normal((n, s)), dtype) for s in sizes]
+    spec = packing.pack_spec(tree)
+    back = packing.unpack(packing.pack(tree, spec), spec)
+    for a, b in zip(tree, back):
+        assert b.dtype == a.dtype
+        np.testing.assert_array_equal(np.asarray(b, np.float32),
+                                      np.asarray(a, np.float32))
+
+
+def test_packed_mix_equals_leafwise_mix():
+    """Mixing the packed buffer == leaf-wise mixing (linearity)."""
+    rng = np.random.default_rng(8)
+    n = 10
+    A = jnp.asarray(rng.random((n, n)), jnp.float32)
+    tree = _tree(rng, n)
+    spec = packing.pack_spec(tree)
+    mixed_buf = mix_ref(A, packing.pack(tree, spec))
+    got = packing.unpack(mixed_buf, spec)
+    want = mix_deltas(A, tree)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# round-function backends + scanned driver
+# ---------------------------------------------------------------------------
+
+def quad_loss(params, batch):
+    x = params["x"]
+    b, = batch
+    return 0.5 * jnp.sum((x - b.mean(axis=0)) ** 2)
+
+
+def _round_inputs(rng, n, p, T, B, K):
+    targets = rng.standard_normal((n, p))
+    batches, As, taus, ms = [], [], [], []
+    for _ in range(K):
+        samp = targets[:, None, None, :] \
+            + 0.05 * rng.standard_normal((n, T, B, p))
+        batches.append((jnp.asarray(samp, jnp.float32),))
+        As.append(jnp.asarray(rng.random((n, n)), jnp.float32))
+        tau = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+        taus.append(tau)
+        ms.append(jnp.float32(max(1.0, float(tau.sum()))))
+    return batches, As, taus, ms
+
+
+@pytest.mark.parametrize("backend", ["pallas", "fused"])
+def test_round_fn_backend_matches_einsum(backend):
+    rng = np.random.default_rng(9)
+    n, p, T, B, K = 6, 5, 3, 2, 3
+    batches, As, taus, ms = _round_inputs(rng, n, p, T, B, K)
+    eta = jnp.float32(0.1)
+    params = {"x": jnp.zeros(p)}
+
+    ref_fn = make_round_fn(quad_loss)
+    got_fn = make_round_fn(quad_loss, mixing_backend=backend, chunk=256)
+    ref_p, got_p = params, params
+    for t in range(K):
+        ref_p, ref_mixed = ref_fn(ref_p, batches[t], As[t], taus[t],
+                                  ms[t], eta)
+        got_p, got_mixed = got_fn(got_p, batches[t], As[t], taus[t],
+                                  ms[t], eta)
+        np.testing.assert_allclose(np.asarray(got_mixed["x"]),
+                                   np.asarray(ref_mixed["x"]),
+                                   rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_p["x"]),
+                               np.asarray(ref_p["x"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_scanned_rounds_bitwise_identical_to_sequential():
+    rng = np.random.default_rng(10)
+    n, p, T, B, K = 5, 4, 3, 2, 4
+    batches, As, taus, ms = _round_inputs(rng, n, p, T, B, K)
+    etas = [jnp.float32(0.2 / (1 + t)) for t in range(K)]
+    params = {"x": jnp.zeros(p)}
+
+    round_fn = make_round_fn(quad_loss)
+    seq = []
+    prm = params
+    for t in range(K):
+        prm, _ = round_fn(prm, batches[t], As[t], taus[t], ms[t], etas[t])
+        seq.append(np.asarray(prm["x"]))
+
+    scanned = make_scanned_rounds(quad_loss, K)
+    batches_seq = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+    final, params_seq = scanned(params, batches_seq, jnp.stack(As),
+                                jnp.stack(taus), jnp.stack(ms),
+                                jnp.stack(etas))
+    # bitwise: the scan body is the same composition as round_fn
+    np.testing.assert_array_equal(np.asarray(final["x"]), seq[-1])
+    for t in range(K):
+        np.testing.assert_array_equal(np.asarray(params_seq["x"][t]), seq[t])
+
+
+def _server_pair(scan_rounds, mixing_backend="einsum"):
+    rng = np.random.default_rng(11)
+    n, c, p, T = 12, 2, 4, 3
+    targets = rng.standard_normal((n, p)).astype(np.float32)
+
+    def sampler(r, t):
+        samp = targets[:, None, None, :] \
+            + 0.05 * r.standard_normal((n, T, 2, p))
+        return (jnp.asarray(samp, jnp.float32),)
+
+    net = D2DNetwork(n=n, c=c, k_range=(4, 6), p_fail=0.1)
+    cfg = ServerConfig(T=T, t_max=5, phi_max=0.3, seed=3,
+                       eta=lambda t: 0.2 / (1 + 0.3 * t))
+    server = FederatedServer(net, quad_loss, {"x": jnp.zeros(p)}, sampler,
+                             cfg, algorithm="semidec",
+                             mixing_backend=mixing_backend,
+                             scan_rounds=scan_rounds)
+    x_star = targets.mean(axis=0)
+    hist = server.run(eval_fn=lambda prm: {
+        "gap": float(jnp.sum((prm["x"] - x_star) ** 2))})
+    return server, hist
+
+
+def test_server_scan_rounds_matches_sequential_history():
+    """Opt-in scan driver: identical History (records, ledger, metrics)
+    and identical final params -- semantics unchanged."""
+    s_seq, h_seq = _server_pair(scan_rounds=False)
+    s_scan, h_scan = _server_pair(scan_rounds=True)
+    assert len(h_seq.records) == len(h_scan.records)
+    for a, b in zip(h_seq.records, h_scan.records):
+        assert (a.t, a.m, a.m_actual, a.d2s, a.d2d) == \
+            (b.t, b.m, b.m_actual, b.d2s, b.d2d)
+        assert a.metrics["gap"] == pytest.approx(b.metrics["gap"],
+                                                 rel=1e-6, abs=1e-7)
+    np.testing.assert_array_equal(np.asarray(s_seq.params["x"]),
+                                  np.asarray(s_scan.params["x"]))
+    assert h_scan.ledger.cumulative_cost()[-1] == \
+        h_seq.ledger.cumulative_cost()[-1]
+
+
+def test_server_fused_backend_converges():
+    _, hist = _server_pair(scan_rounds=False, mixing_backend="fused")
+    gaps = hist.series("gap")
+    assert gaps[-1] < gaps[0]
+
+
+def test_make_round_fn_rejects_unknown_backend():
+    with pytest.raises(ValueError):
+        make_round_fn(quad_loss, mixing_backend="nope")

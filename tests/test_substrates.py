@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, strategies as st
 
 from repro.ckpt import latest_checkpoint, load_checkpoint, save_checkpoint
 from repro.data import (Dataset, FederatedBatcher, dirichlet_partition,
