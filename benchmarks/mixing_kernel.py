@@ -18,6 +18,16 @@ i.e. the fused kernel reads the payload once per round where the
 two-pass schedule reads it twice (X, then mixed) -- a ~2x reduction in
 payload reads and ~1.5x in total traffic; the aggregate-only variant
 (FedAvg A=I, or rounds that don't log per-client deltas) is ~3x.
+
+Cross-worker traffic on the mesh runtime (``mesh_traffic_model``): the
+per-leaf psum schedule all-reduces every worker's tau-weighted delta
+contribution leaf by leaf -- each worker RECEIVES the full fp32 row, so
+per-worker bytes are ``2 (W-1)/W * 4p`` over ``L`` collective launches.
+The worker-sharded 'fused_rs' path reduce-scatters the single packed row
+instead: each worker receives only its ``p/W`` column shard,
+``(W-1)/W * 4p`` bytes in ONE collective -- exactly half the cross-worker
+traffic and 1/L-th the launches (the re-replication is deferred to the
+next round's broadcast, which the train step performs anyway).
 """
 
 from __future__ import annotations
@@ -31,7 +41,12 @@ import numpy as np
 from repro.kernels.mixing.ops import aggregate, mix, mix_aggregate
 from repro.kernels.mixing.ref import mix_ref
 
-__all__ = ["run", "traffic_model"]
+__all__ = ["run", "traffic_model", "mesh_traffic_model"]
+
+# launch count for the per-leaf psum schedule in the reported model: a
+# representative LM delta-tree leaf count (the packed fused_rs schedule
+# always launches once, whatever the tree shape)
+_LM_LEAVES = 50
 
 
 def traffic_model(n: int, p: int, itemsize: int) -> dict:
@@ -46,6 +61,28 @@ def traffic_model(n: int, p: int, itemsize: int) -> dict:
         payload_reads_fused=1,
         traffic_ratio_fused=(3 * npB + pB) / (2 * npB + pB),
         traffic_ratio_agg_only=(3 * npB + pB) / (npB + pB),
+    )
+
+
+def mesh_traffic_model(n_workers: int, p: int, n_leaves: int = 1) -> dict:
+    """Cross-worker bytes per round for the mesh D2S aggregation.
+
+    Bandwidth-optimal ring collectives over a (p,) fp32 contribution row:
+    an all-reduce (the per-leaf psum schedule) moves ``2 (W-1)/W``
+    payloads per worker across ``n_leaves`` launches; a reduce-scatter
+    (the packed 'fused_rs' schedule) moves ``(W-1)/W`` in one launch.
+    """
+    full = p * 4                               # fp32 contribution row
+    frac = (n_workers - 1) / n_workers
+    psum = 2.0 * frac * full
+    rs = frac * full
+    return dict(
+        mesh_workers=n_workers,
+        bytes_psum_per_worker=psum,
+        bytes_reduce_scatter_per_worker=rs,
+        collective_launches_psum=n_leaves,
+        collective_launches_fused_rs=1,
+        cross_worker_ratio=psum / rs if rs else float("inf"),
     )
 
 
@@ -101,16 +138,30 @@ def run(quiet: bool = False):
         t_agg = _time(lambda: aggregate(A, tau, m, X))
 
         model = traffic_model(n, p, np.dtype(dtype).itemsize)
+        # cross-worker model: 8 workers (the CPU test mesh) moving this
+        # row's p columns; _LM_LEAVES launches for the per-leaf schedule
+        mesh = mesh_traffic_model(8, p, n_leaves=_LM_LEAVES)
         rows.append(dict(n=n, p=p, dtype=str(np.dtype(dtype).name),
                          us_ref=t_ref, us_two_pass_interp=t_two,
                          us_fused_interp=t_fused, us_agg_only_interp=t_agg,
-                         match=True, **model))
+                         match=True, **model, **mesh))
         if not quiet:
             print(f"n={n:3d} p={p:8d} {np.dtype(dtype).name:9s} "
                   f"ref={t_ref:9.1f}us two-pass={t_two:9.1f}us "
                   f"fused={t_fused:9.1f}us agg-only={t_agg:9.1f}us "
                   f"traffic x{model['traffic_ratio_fused']:.2f} "
                   f"(agg-only x{model['traffic_ratio_agg_only']:.2f})  OK")
+
+    if not quiet:
+        print("\ncross-worker D2S bytes/worker (fp32 row, ring "
+              "collectives): per-leaf psum vs packed fused_rs "
+              "reduce-scatter")
+        for W in (8, 256):
+            m = mesh_traffic_model(W, 1_660_000, n_leaves=_LM_LEAVES)
+            print(f"  W={W:4d} p=1.66M  psum={m['bytes_psum_per_worker']/1e6:7.2f}MB"
+                  f" x{m['collective_launches_psum']} launches   "
+                  f"fused_rs={m['bytes_reduce_scatter_per_worker']/1e6:7.2f}MB"
+                  f" x1 launch   ratio x{m['cross_worker_ratio']:.2f}")
     return rows
 
 

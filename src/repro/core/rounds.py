@@ -28,6 +28,12 @@ backends (``make_round_fn(..., mixing_backend=...)``):
               and the fused kernel streams it ONCE, emitting both the
               mixed deltas (eq. 3) and the tau-weighted aggregate row
               (eq. 4) in a single launch per round.
+  'aggregate' -- aggregate-only fast path: same packed buffer, but the
+              kernel computes only ``((tau^T A)/m) @ X`` -- the mixed
+              deltas are never materialized and the round returns ``None``
+              in their place (~3x less payload traffic than two-pass; see
+              BENCH_mixing.json).  The ``FederatedServer`` selects this
+              automatically when nothing records per-client mixed deltas.
 
 ``make_scanned_rounds`` wraps the round in ``jax.lax.scan`` over stacked
 ``(A_t, tau_t, m_t, eta_t)`` sequences so a K-round trajectory dispatches
@@ -59,7 +65,7 @@ __all__ = [
 PyTree = Any
 LossFn = Callable[[PyTree, PyTree], jnp.ndarray]  # (params, batch) -> scalar
 
-MIXING_BACKENDS = ("einsum", "pallas", "fused")
+MIXING_BACKENDS = ("einsum", "pallas", "fused", "aggregate")
 
 
 def local_sgd(loss_fn: LossFn, params: PyTree, batches: PyTree,
@@ -143,9 +149,7 @@ def fused_mix_update(global_params: PyTree, deltas: PyTree, A: jnp.ndarray,
     mixed_buf, agg_row = mix_aggregate(A, tau, m, buf, chunk=chunk,
                                        interpret=interpret)
     mixed = packing.unpack(mixed_buf, spec)
-    agg = packing.unpack_row(agg_row, spec)
-    new_global = jax.tree.map(lambda g, a: (g + a).astype(g.dtype),
-                              global_params, agg)
+    new_global = packing.apply_aggregate_row(global_params, agg_row, spec)
     return new_global, mixed
 
 
@@ -161,6 +165,16 @@ def _mix_and_update(global_params, deltas, A, tau, m, *, mixing_backend,
     if mixing_backend == "fused":
         return fused_mix_update(global_params, deltas, A, tau, m,
                                 chunk=chunk, interpret=interpret)
+    if mixing_backend == "aggregate":
+        from repro.fl import packing
+        from repro.kernels.mixing.ops import aggregate
+
+        spec = packing.pack_spec(deltas)
+        buf = packing.pack(deltas, spec)
+        agg_row = aggregate(A, tau, m, buf, chunk=chunk,
+                            interpret=interpret)
+        return packing.apply_aggregate_row(global_params, agg_row,
+                                           spec), None
     raise ValueError(
         f"mixing_backend must be one of {MIXING_BACKENDS}, "
         f"got {mixing_backend!r}")
@@ -175,8 +189,10 @@ def make_round_fn(loss_fn: LossFn, jit: bool = True,
       - client_batches leaves: (n, T, ...) -- T local minibatches per client
       - A: (n, n) runtime equal-neighbor matrix
       - tau: (n,) 0/1 sampling indicators; m = tau.sum() (passed explicitly)
-    Returns ``(new_global_params, deltas)`` -- deltas exposed for testing and
-    communication accounting.
+    Returns ``(new_global_params, mixed_deltas)`` -- the mixed deltas are
+    exposed for testing and communication accounting, except under the
+    'aggregate' backend, which never materializes them and returns ``None``
+    in their place.
 
     ``mixing_backend`` selects the eq. 3 + eq. 4 implementation (module
     docstring); ``chunk``/``interpret`` configure the Pallas backends and

@@ -16,12 +16,25 @@ Two performance knobs thread through to ``repro.core.rounds``:
 
 * ``mixing_backend`` ('einsum' | 'pallas' | 'fused') selects the eq. 3+4
   implementation -- 'fused' packs the delta pytree into one flat buffer
-  and streams it through the fused Pallas kernel once per round.
+  and streams it through the fused Pallas kernel once per round.  Because
+  ``History`` never records per-client mixed deltas, the kernel backends
+  are upgraded to the aggregate-only fast path ('aggregate',
+  ``kernels.mixing.ops.aggregate``: ~3x less payload traffic) unless the
+  caller opts back in with ``record_mixed=True``.
 * ``scan_rounds=True`` plans all ``t_max`` rounds up front (topology
   sampling and batch draws are host-side and param-independent) and runs
   them in a single ``lax.scan`` dispatch via ``make_scanned_rounds``;
   per-round params are emitted by the scan, so ``History`` records and
   eval cadence are unchanged.
+* ``mesh=`` + ``model_cfg=`` swap the single-host round function for the
+  mesh runtime (``repro.fl.distributed``): each round dispatches
+  ``make_train_step`` (``mixing_backend`` then names a mesh mixing
+  schedule: 'ring' | 'gather' | 'einsum' | 'fused' | 'fused_rs'), and
+  ``scan_rounds=True`` composes with it via ``make_scanned_train_steps``
+  so the whole ``t_max``-round time-varying trajectory is ONE mesh
+  dispatch.  ``batch_sampler`` must then return the per-round token
+  array ``(n_clients, T, B_local, S+1)`` instead of a batch tree;
+  ``History`` semantics are unchanged.
 """
 
 from __future__ import annotations
@@ -101,14 +114,12 @@ class FederatedServer:
     def __init__(self, network: D2DNetwork, loss_fn, init_params: PyTree,
                  batch_sampler: BatchSampler, config: ServerConfig,
                  algorithm: str = "semidec", jit: bool = True,
-                 mixing_backend: str = "einsum", scan_rounds: bool = False):
+                 mixing_backend: str = "einsum", scan_rounds: bool = False,
+                 record_mixed: bool = False, mesh=None, model_cfg=None):
         if algorithm not in ALGORITHMS:
             raise ValueError(f"algorithm must be one of {ALGORITHMS}")
         if algorithm in ("fedavg", "colrel") and config.m_fixed is None:
             raise ValueError(f"{algorithm} requires config.m_fixed")
-        if mixing_backend not in MIXING_BACKENDS:
-            raise ValueError(
-                f"mixing_backend must be one of {MIXING_BACKENDS}")
         self.network = network
         self.config = config
         self.algorithm = algorithm
@@ -118,11 +129,47 @@ class FederatedServer:
         self.scan_rounds = scan_rounds
         self._loss_fn = loss_fn
         self._jit = jit
-        self.round_fn = make_round_fn(loss_fn, jit=jit,
-                                      mixing_backend=mixing_backend)
+        self.mesh = mesh
+        self.model_cfg = model_cfg
         self.rng = np.random.default_rng(config.seed)
         self._m_next = (config.m_fixed if algorithm != "semidec"
                         else (config.m0 or network.n))
+        if mesh is not None:
+            # mesh runtime: round dispatch goes through repro.fl.distributed
+            # (mixing_backend names a mesh mixing schedule).
+            from repro.fl.distributed import MIXINGS, make_train_step
+            if model_cfg is None:
+                raise ValueError("mesh runtime requires model_cfg")
+            if mixing_backend not in MIXINGS:
+                raise ValueError(
+                    f"mesh mixing must be one of {MIXINGS}")
+            if record_mixed:
+                raise ValueError(
+                    "record_mixed is not supported on the mesh runtime: "
+                    "the mesh train step never returns mixed deltas")
+            self.effective_backend = mixing_backend
+            self.round_fn = None
+            self._mesh_step = make_train_step(model_cfg, mesh,
+                                              mixing=mixing_backend,
+                                              jit=jit)
+            return
+        if mixing_backend not in MIXING_BACKENDS:
+            raise ValueError(
+                f"mixing_backend must be one of {MIXING_BACKENDS}")
+        if record_mixed and mixing_backend == "aggregate":
+            raise ValueError(
+                "record_mixed=True contradicts the 'aggregate' backend, "
+                "which never materializes mixed deltas")
+        # History never records per-client mixed deltas, so unless the
+        # caller explicitly wants round_fn to return them, the kernel
+        # backends dispatch kernels.mixing.ops.aggregate instead (the
+        # aggregate-only ROADMAP variant: same update, ~3x less traffic).
+        self.effective_backend = mixing_backend
+        if not record_mixed and mixing_backend in ("pallas", "fused"):
+            self.effective_backend = "aggregate"
+        self._mesh_step = None
+        self.round_fn = make_round_fn(loss_fn, jit=jit,
+                                      mixing_backend=self.effective_backend)
 
     # -- one global aggregation round -------------------------------------
 
@@ -174,12 +221,15 @@ class FederatedServer:
             A, tau, m, m_actual, d2d, psi_bound = self._plan_round(t)
             eta = float(cfg.eta(t))
             batches = self.batch_sampler(self.rng, t)
-            self.params, _ = self.round_fn(
-                self.params, batches,
-                jnp.asarray(A, dtype=jnp.float32),
-                jnp.asarray(tau, dtype=jnp.float32),
-                jnp.asarray(float(m_actual), dtype=jnp.float32),
-                jnp.asarray(eta, dtype=jnp.float32))
+            args = (self.params, batches,
+                    jnp.asarray(A, dtype=jnp.float32),
+                    jnp.asarray(tau, dtype=jnp.float32),
+                    jnp.asarray(float(m_actual), dtype=jnp.float32),
+                    jnp.asarray(eta, dtype=jnp.float32))
+            if self.mesh is not None:
+                self.params = self._mesh_step(*args)
+            else:
+                self.params, _ = self.round_fn(*args)
 
             rec = RoundRecord(t=t, m=m, m_actual=m_actual,
                               psi_bound=psi_bound, d2s=m_actual, d2d=d2d,
@@ -217,9 +267,16 @@ class FederatedServer:
                               jnp.float32)
         batches_seq = jax.tree.map(lambda *bs: jnp.stack(bs), *batch_list)
 
-        scanned = make_scanned_rounds(self._loss_fn, cfg.t_max,
-                                      jit=self._jit,
-                                      mixing_backend=self.mixing_backend)
+        if self.mesh is not None:
+            from repro.fl.distributed import make_scanned_train_steps
+            scanned = make_scanned_train_steps(self.model_cfg, self.mesh,
+                                               cfg.t_max,
+                                               mixing=self.mixing_backend,
+                                               jit=self._jit)
+        else:
+            scanned = make_scanned_rounds(
+                self._loss_fn, cfg.t_max, jit=self._jit,
+                mixing_backend=self.effective_backend)
         self.params, params_seq = scanned(self.params, batches_seq, A_seq,
                                           tau_seq, m_seq, eta_seq)
 

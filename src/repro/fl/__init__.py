@@ -2,10 +2,12 @@
 round and the sharded inference steps.  ``repro.core.rounds`` is the
 single-host oracle with identical semantics."""
 
-from .distributed import (make_train_step, make_prefill_step,
+from .distributed import (MIXINGS, make_train_step,
+                          make_scanned_train_steps, make_prefill_step,
                           make_decode_step, build_topology_inputs)
 from .packing import PackSpec, pack, pack_spec, unpack, unpack_row
 
-__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+__all__ = ["MIXINGS", "make_train_step", "make_scanned_train_steps",
+           "make_prefill_step", "make_decode_step",
            "build_topology_inputs", "PackSpec", "pack", "pack_spec",
            "unpack", "unpack_row"]

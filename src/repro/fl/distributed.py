@@ -27,11 +27,41 @@ step serves every round of Algorithm 1, FedAvg (A=I) and COLREL (fixed m).
                    identity ``sum_i tau_i (A X)_i = (tau^T A) X`` so the
                    payload is read ONCE and the mixed deltas are never
                    materialized (the train step only returns the new
-                   global params).  GSPMD shards the packed matmul; a
-                   manually worker-sharded fused path is a ROADMAP open
-                   item.
+                   global params).  GSPMD shards the packed matmul.
+       'fused_rs' -- manual shard_map version of 'fused': each worker
+                   scales its OWN packed row by its precombined D2S
+                   weight ``w_i = ((tau^T A)/m)_i`` and the (P,) aggregate
+                   row is REDUCE-SCATTERED over 'data' (ZeRO-style) +
+                   psum-ed over 'pod', so every worker receives only
+                   P/n_data columns instead of the full row a psum would
+                   deliver (2x less cross-worker traffic than the
+                   per-leaf psum schedule; see
+                   ``benchmarks.mixing_kernel.mesh_traffic_model``).
+                   Mixed deltas are never materialized and no (n, n)
+                   matmul runs on-device -- only an elementwise scale.
   4. D2S        -- ``psum`` of ``tau_i * Delta_i`` over (pod, data) --
      the expensive cross-pod collective -- scaled by 1/m (paper eq. (4)).
+
+Backend-selection matrix (mixing x runtime x scan)::
+
+    mixing     collectives        mixed deltas   K-round scan   best when
+    --------   ----------------   ------------   ------------   ------------------
+    ring       ppermute + psum    materialized   yes (*)        TPU ICI, ZeRO
+                                                                 (zero=True)
+    gather     all_gather + psum  materialized   yes (*)        debugging only
+    einsum     GSPMD-scheduled    materialized   yes            oracle parity
+    fused      GSPMD-scheduled    never          yes            payload read once
+    fused_rs   psum_scatter(+psum) never         yes (*)        min cross-worker
+                                                                 bytes per round
+
+    (*) manual-collective schedules need ``jax.shard_map`` (jax >= 0.6) or
+    ``jax.experimental.shard_map`` (jax 0.4.x) -- see ``_shard_map``.
+
+Scan: ``make_scanned_train_steps(cfg, mesh, K, ...)`` lifts the stacked
+``(A_t, tau_t, m_t, eta_t)`` ``lax.scan`` of ``core.rounds
+.make_scanned_rounds`` into the mesh runtime, so a K-round time-varying
+topology trajectory compiles and dispatches ONCE for every mixing
+schedule above (single-host oracle: ``repro.core.rounds``).
 """
 
 from __future__ import annotations
@@ -49,14 +79,33 @@ from repro.core.graphs import D2DNetwork
 from repro.models.config import ModelConfig
 from repro.models.model import Model
 from repro.models import sharding as shard_rules
-from repro.launch.mesh import client_axes, model_axis_size, n_clients_of
+from repro.launch.mesh import (client_axes, data_axis_size,
+                               model_axis_size, n_clients_of)
 
 PyTree = Any
 
-__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+__all__ = ["make_train_step", "make_scanned_train_steps",
+           "make_prefill_step", "make_decode_step",
            "build_topology_inputs", "MIXINGS"]
 
-MIXINGS = ("ring", "gather", "einsum", "fused")
+MIXINGS = ("ring", "gather", "einsum", "fused", "fused_rs")
+
+
+def _shard_map(f, mesh, in_specs, out_specs, axis_names=None):
+    """``jax.shard_map`` with a fallback to ``jax.experimental.shard_map``
+    (jax 0.4.x), so the manual-collective mixing schedules run on both API
+    generations.  ``axis_names`` restricts manualness to those axes
+    (partial shard_map); on the legacy API that maps to ``auto=`` (the
+    complement set)."""
+    if hasattr(jax, "shard_map"):
+        kw = {} if axis_names is None else {"axis_names": axis_names}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False, **kw)
+    from jax.experimental.shard_map import shard_map as legacy_shard_map
+    kw = {} if axis_names is None else {
+        "auto": frozenset(mesh.axis_names) - set(axis_names)}
+    return legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_rep=False, **kw)
 
 
 def _shardings(mesh, specs: PyTree) -> PyTree:
@@ -99,7 +148,7 @@ def _mix_and_aggregate(mesh, mixing: str, deltas: PyTree, A: jnp.ndarray,
     intra-pod 'data' axis and the D2S psum over (pod, data).
     """
     caxes = client_axes(mesh)
-    n_data = mesh.shape[caxes[-1]]
+    n_data = data_axis_size(mesh)
     n = n_clients_of(mesh)
 
     if mixing == "einsum":
@@ -129,21 +178,46 @@ def _mix_and_aggregate(mesh, mixing: str, deltas: PyTree, A: jnp.ndarray,
         # The packed buffer is read once and the (n, P) mixed intermediate
         # is never formed -- the train step only needs the new global.
         from repro.fl import packing
+        from repro.kernels.mixing.ops import combine_weights
 
         spec = packing.pack_spec(deltas)
         buf = packing.pack(deltas, spec)                   # (n, P_pad)
-        w = jnp.einsum("i,ij->j", tau.astype(jnp.float32),
-                       A.astype(jnp.float32),
-                       preferred_element_type=jnp.float32) / m
+        w = combine_weights(A, tau, m)
         agg_row = jnp.einsum("j,jp->p", w, buf.astype(jnp.float32),
                              preferred_element_type=jnp.float32)
-        agg = packing.unpack_row(agg_row, spec)
-        return jax.tree.map(lambda g, a: (g + a).astype(g.dtype),
-                            global_params, agg)
+        return packing.apply_aggregate_row(global_params, agg_row, spec)
+
+    if mixing == "fused_rs":
+        # manual worker-sharded 'fused': worker i holds packed row X_i
+        # (client axis sharded over (pod, data)) and its own weight
+        # w_i = ((tau^T A)/m)_i, computes the local contribution w_i X_i,
+        # and the aggregate row sum_i w_i X_i is reduce-scattered over
+        # 'data' (each worker receives only its P_pad/n_data column
+        # shard, ZeRO-style) then psum-ed over 'pod'.  No mixed deltas,
+        # no (n, n) matmul, and half the cross-worker bytes of a psum.
+        from repro.fl import packing
+        from repro.kernels.mixing.ops import combine_weights
+
+        spec = packing.pack_spec(deltas, shards=n_data)
+        buf = packing.pack(deltas, spec)                   # (n, P_pad)
+        w = combine_weights(A, tau, m)                     # (n,) fp32
+
+        def rs_body(b, wv):
+            contrib = wv[0] * b[0].astype(jnp.float32)     # (P_pad,)
+            part = jax.lax.psum_scatter(contrib, caxes[-1],
+                                        scatter_dimension=0, tiled=True)
+            if len(caxes) > 1:
+                part = jax.lax.psum(part, caxes[:-1])
+            return part
+
+        agg_row = _shard_map(rs_body, mesh,
+                             in_specs=(P(caxes, None), P(caxes)),
+                             out_specs=P(caxes[-1]))(buf, w)
+        return packing.apply_aggregate_row(global_params, agg_row, spec)
 
     gspecs = shard_rules.param_specs(global_params, msize)
     if zero:
-        gspecs = zero_specs(gspecs, global_params, mesh.shape[caxes[-1]])
+        gspecs = zero_specs(gspecs, global_params, n_data)
     dspecs = shard_rules.param_specs(global_params, msize, prefix=(caxes,))
     def _zero_dim(s):
         t = tuple(s)
@@ -208,10 +282,10 @@ def _mix_and_aggregate(mesh, mixing: str, deltas: PyTree, A: jnp.ndarray,
 
         return jax.tree.map(agg_leaf, global_params, mixed, zero_dims)
 
-    return jax.shard_map(
-        body, mesh=mesh,
+    return _shard_map(
+        body, mesh,
         in_specs=(dspecs, P(None, None), P(None), P(), gspecs),
-        out_specs=gspecs, check_vma=False,
+        out_specs=gspecs,
     )(deltas, A, tau, m, global_params)
 
 
@@ -304,9 +378,9 @@ def make_train_step(cfg: ModelConfig, mesh, mixing: str = "ring",
                                                + (None,) * (a.ndim - 1))),
                                  per_client),
                     P(caxes, None, None, None))
-                finals = jax.shard_map(
-                    body, mesh=mesh, in_specs=in_specs,
-                    out_specs=in_specs[0], check_vma=False,
+                finals = _shard_map(
+                    body, mesh, in_specs=in_specs,
+                    out_specs=in_specs[0],
                     axis_names=set(caxes))(per_client, tokens)
             else:
                 body = lambda p0, t, pe: ex(                     # noqa: E731
@@ -314,11 +388,11 @@ def make_train_step(cfg: ModelConfig, mesh, mixing: str = "ring",
                 pspec = jax.tree.map(
                     lambda a: P(*((caxes,) + (None,) * (a.ndim - 1))),
                     per_client)
-                finals = jax.shard_map(
-                    body, mesh=mesh,
+                finals = _shard_map(
+                    body, mesh,
                     in_specs=(pspec, P(caxes, None, None, None),
                               P(caxes, None, None, None, None)),
-                    out_specs=pspec, check_vma=False,
+                    out_specs=pspec,
                     axis_names=set(caxes))(per_client, tokens, prefix)
         finals = jax.lax.with_sharding_constraint(finals, cshard)
 
@@ -333,6 +407,53 @@ def make_train_step(cfg: ModelConfig, mesh, mixing: str = "ring",
     if not jit:
         return train_step
     return jax.jit(train_step)
+
+
+# ---------------------------------------------------------------------------
+# scanned multi-round driver (one dispatch per K-round trajectory)
+# ---------------------------------------------------------------------------
+
+def make_scanned_train_steps(cfg: ModelConfig, mesh, K: int,
+                             mixing: str = "ring", jit: bool = True,
+                             zero: bool = False,
+                             client_impl: str = "vmap"):
+    """Build a driver that runs ``K`` mesh train steps in one ``lax.scan``.
+
+    The mesh sibling of ``repro.core.rounds.make_scanned_rounds``: the host
+    stacks the whole time-varying topology trajectory up front and the
+    K-round program compiles and dispatches to the mesh ONCE:
+
+    ``scanned(global_params, tokens_seq, A_seq, tau_seq, m_seq, eta_seq[,
+    prefix_seq]) -> (final_params, params_seq)``
+
+      - tokens_seq: (K, n_clients, T, B_local, S+1) stacked round batches
+        (prefix_seq, when given: (K, n_clients, T, B_local, P, fdim))
+      - A_seq (K, n, n), tau_seq (K, n), m_seq (K,), eta_seq (K,)
+      - params_seq leaves: (K, ...) -- global params after each round
+        (``params_seq[K-1] == final_params``), so per-round evaluation and
+        ``History`` bookkeeping stay exact.
+
+    The scan body is the *same* train step ``make_train_step`` builds (any
+    ``mixing`` schedule, including the manual shard_map ones -- shard_map
+    nests under scan), so the trajectory is bitwise-identical to K
+    sequential ``train_step`` dispatches on the same inputs (asserted in
+    tests/test_mesh_scan_equivalence.py)."""
+    step = make_train_step(cfg, mesh, mixing=mixing, jit=False, zero=zero,
+                           client_impl=client_impl)
+
+    def scanned(global_params, tokens_seq, A_seq, tau_seq, m_seq, eta_seq,
+                prefix_seq=None):
+        def body(params, xs):
+            new = step(params, *xs)
+            return new, new
+
+        xs = (tokens_seq, A_seq, tau_seq, m_seq, eta_seq)
+        if prefix_seq is not None:
+            xs = xs + (prefix_seq,)
+        final, params_seq = jax.lax.scan(body, global_params, xs, length=K)
+        return final, params_seq
+
+    return jax.jit(scanned) if jit else scanned
 
 
 # ---------------------------------------------------------------------------

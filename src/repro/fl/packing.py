@@ -10,6 +10,8 @@ tree's shape, and caches the offset/shape metadata per tree structure so
 repeated rounds pay zero host-side re-planning.
 
     spec  = pack_spec(deltas)          # cached per (treedef, shapes, ...)
+    spec  = pack_spec(deltas, shards=k)  # P_pad also divisible into k
+                                         # lane-aligned column blocks
     buf   = pack(deltas, spec)         # (n, P_pad), one concat
     tree  = unpack(buf, spec)          # exact inverse (slices + reshapes)
     tree1 = unpack_row(row, spec)      # (P,) aggregate row -> param tree
@@ -36,7 +38,8 @@ import numpy as np
 
 PyTree = Any
 
-__all__ = ["PackSpec", "pack_spec", "pack", "unpack", "unpack_row"]
+__all__ = ["PackSpec", "pack_spec", "pack", "unpack", "unpack_row",
+           "apply_aggregate_row"]
 
 _LANE = 128
 
@@ -66,22 +69,33 @@ class PackSpec:
 _SPEC_CACHE: Dict[Any, PackSpec] = {}
 
 
-def pack_spec(deltas: PyTree, *, align: int = _LANE) -> PackSpec:
+def pack_spec(deltas: PyTree, *, align: int = _LANE,
+              shards: int = 1) -> PackSpec:
     """Build (or fetch the cached) layout spec for a per-client delta tree
-    whose leaves share a leading client axis ``n``."""
+    whose leaves share a leading client axis ``n``.
+
+    ``shards`` requests shard-aligned padding: ``P_pad`` becomes a multiple
+    of ``align * shards`` so the packed buffer splits evenly into ``shards``
+    lane-aligned column blocks -- required by the worker-sharded fused path
+    (``repro.fl.distributed`` mixing='fused_rs'), which reduce-scatters the
+    aggregate row over the mesh 'data' axis.
+    """
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
     leaves, treedef = jax.tree.flatten(deltas)
     if not leaves:
         raise ValueError("pack_spec: empty delta tree")
     shapes = tuple(tuple(l.shape[1:]) for l in leaves)
     dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
-    key = (treedef, shapes, dtypes, align)
+    key = (treedef, shapes, dtypes, align, shards)
     spec = _SPEC_CACHE.get(key)
     if spec is not None:
         return spec
     sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
     offsets = tuple(int(o) for o in np.cumsum((0,) + sizes[:-1]))
     total = int(sum(sizes))
-    padded = ((total + align - 1) // align) * align
+    unit = align * shards
+    padded = ((total + unit - 1) // unit) * unit
     spec = PackSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
                     offsets=offsets, sizes=sizes, total=total,
                     padded=padded, dtype=jnp.result_type(*dtypes))
@@ -119,3 +133,13 @@ def unpack_row(row: jnp.ndarray, spec: PackSpec) -> PyTree:
         for o, s, shp in zip(spec.offsets, spec.sizes, spec.shapes)
     ]
     return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def apply_aggregate_row(global_params: PyTree, row: jnp.ndarray,
+                        spec: PackSpec) -> PyTree:
+    """Eq.-4 epilogue shared by every one-pass backend: unpack the fp32
+    aggregate row and add it leaf-wise, casting back to each global-param
+    leaf's dtype only after the add."""
+    agg = unpack_row(row, spec)
+    return jax.tree.map(lambda g, a: (g + a).astype(g.dtype),
+                        global_params, agg)

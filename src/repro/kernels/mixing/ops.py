@@ -28,7 +28,8 @@ from .ref import mix_ref
 
 PyTree = Any
 
-__all__ = ["mix", "mix_pytree", "mix_aggregate", "aggregate"]
+__all__ = ["mix", "mix_pytree", "mix_aggregate", "aggregate",
+           "combine_weights"]
 
 _LANE = 128
 _SUBLANE = 8
@@ -48,12 +49,23 @@ def _pad_inputs(A, X, chunk):
     return A_p, X_p, n, p
 
 
+def combine_weights(A: jnp.ndarray, tau: jnp.ndarray,
+                    m: jnp.ndarray) -> jnp.ndarray:
+    """Precombined D2S weight row ``w = (tau^T A) / m`` (fp32, shape (n,)).
+
+    The algebraic identity ``(1/m) sum_i tau_i (A X)_i = w @ X`` is what
+    every one-pass aggregate path (fused kernel, jit-level 'fused', the
+    worker-sharded 'fused_rs') exploits; this is its single definition.
+    """
+    return jnp.einsum("i,ij->j", tau.astype(jnp.float32),
+                      A.astype(jnp.float32),
+                      preferred_element_type=jnp.float32) / m
+
+
 def _weight_row(A, tau, m, n_pad):
-    """Precombined D2S row ``w = (tau^T A) / m`` (fp32), padded to the
-    sublane multiple with the real weights in row 0."""
-    w = jnp.einsum("i,ij->j", tau.astype(jnp.float32),
-                   A.astype(jnp.float32),
-                   preferred_element_type=jnp.float32) / m
+    """``combine_weights`` padded to the sublane multiple with the real
+    weights in row 0 (the layout the fused kernels consume)."""
+    w = combine_weights(A, tau, m)
     n = w.shape[0]
     return jnp.zeros((_SUBLANE, n_pad), jnp.float32).at[0, :n].set(w)
 

@@ -20,7 +20,7 @@ from typing import Optional, Tuple
 import jax
 
 __all__ = ["make_production_mesh", "make_debug_mesh", "client_axes",
-           "n_clients_of", "model_axis_size"]
+           "n_clients_of", "model_axis_size", "data_axis_size"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -52,3 +52,11 @@ def n_clients_of(mesh) -> int:
 
 def model_axis_size(mesh) -> int:
     return mesh.shape["model"]
+
+
+def data_axis_size(mesh) -> int:
+    """Size of the innermost client axis ('data') -- the reduce-scatter
+    width of the worker-sharded fused mixing path, and the shard count the
+    packed-delta buffer must split evenly across (``repro.fl.packing
+    .pack_spec(..., shards=...)``)."""
+    return mesh.shape[client_axes(mesh)[-1]]

@@ -1,0 +1,182 @@
+"""Subprocess helper: the one-dispatch mesh runtime equivalence property.
+
+For a K-round time-varying topology trajectory (stacked ``(A_t, tau_t,
+m_t, eta_t)`` including an identity-A round and a tau=0 round), and for
+every mixing schedule under test:
+
+    K scanned mesh rounds (``make_scanned_train_steps``, ONE dispatch)
+      == K sequential ``train_step`` dispatches        (bitwise)
+      == the single-host ``make_scanned_rounds`` oracle (allclose, f32
+         reduction order differs across schedules)
+
+plus the server-level half of the property: ``FederatedServer(mesh=...,
+scan_rounds=True)`` produces History records, metrics, and final params
+identical to the sequential mesh driver.
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=8.  Exits
+non-zero (assertion) on mismatch; prints OK lines otherwise.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import jax                                                      # noqa: E402
+import jax.numpy as jnp                                         # noqa: E402
+import numpy as np                                              # noqa: E402
+
+from repro.configs import get_config                            # noqa: E402
+from repro.core import rounds as ref_rounds                     # noqa: E402
+from repro.core import (D2DNetwork, FederatedServer,            # noqa: E402
+                        ServerConfig)
+from repro.core.adjacency import (block_diagonal,               # noqa: E402
+                                  equal_neighbor_matrix)
+from repro.core.graphs import k_regular_digraph                 # noqa: E402
+from repro.fl import make_scanned_train_steps, make_train_step  # noqa: E402
+from repro.launch.mesh import make_debug_mesh                   # noqa: E402
+from repro.models.model import Model                            # noqa: E402
+
+MIXINGS_UNDER_TEST = ("einsum", "fused", "fused_rs", "ring")
+
+
+def _tiny_cfg():
+    cfg = get_config("stablelm-1.6b", reduced=True)
+    return cfg.__class__(**{**cfg.__dict__, "vocab_size": 128,
+                            "name": "tiny"})
+
+
+def _trajectory(rng, n, T, B, S, K):
+    """Time-varying (A_t, tau_t, m_t, eta_t): round 0 is FedAvg (A=I),
+    round 1 samples nobody (tau=0, m clamped to 1), later rounds use
+    fresh random 2-cluster topologies."""
+    toks = jnp.asarray(
+        rng.integers(0, 128, size=(K, n, T, B, S + 1)), jnp.int32)
+    As, taus, ms = [], [], []
+    for t in range(K):
+        if t == 0:
+            A = np.eye(n, dtype=np.float32)
+        else:
+            blocks = [equal_neighbor_matrix(
+                k_regular_digraph(n // 2, 1, rng)) for _ in range(2)]
+            A = block_diagonal(blocks).astype(np.float32)
+        if t == 1:
+            tau = np.zeros(n, np.float32)          # no client sampled
+        else:
+            tau = (rng.random(n) < 0.7).astype(np.float32)
+            if tau.sum() == 0:
+                tau[0] = 1.0
+        As.append(A)
+        taus.append(tau)
+        ms.append(max(1.0, float(tau.sum())))
+    A_seq = jnp.asarray(np.stack(As))
+    tau_seq = jnp.asarray(np.stack(taus))
+    m_seq = jnp.asarray(ms, jnp.float32)
+    eta_seq = jnp.asarray([0.05 / (1 + 0.5 * t) for t in range(K)],
+                          jnp.float32)
+    return toks, A_seq, tau_seq, m_seq, eta_seq
+
+
+def check_scan_equivalence() -> None:
+    mesh = make_debug_mesh((2, 2, 2))         # (pod, data, model)
+    n, T, B, S, K = 4, 2, 2, 16, 3
+    cfg = _tiny_cfg()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    toks, A_seq, tau_seq, m_seq, eta_seq = _trajectory(rng, n, T, B, S, K)
+
+    # single-host oracle trajectory (Algorithm 1 reference)
+    oracle = ref_rounds.make_scanned_rounds(model.loss, K)
+    batches_seq = (toks[..., :-1], toks[..., 1:])
+    ref_final, ref_seq = oracle(params, batches_seq, A_seq, tau_seq,
+                                m_seq, eta_seq)
+
+    for mixing in MIXINGS_UNDER_TEST:
+        step = make_train_step(cfg, mesh, mixing=mixing)
+        seq_params, per_round = params, []
+        for t in range(K):
+            seq_params = step(seq_params, toks[t], A_seq[t], tau_seq[t],
+                              m_seq[t], eta_seq[t])
+            per_round.append(seq_params)
+
+        scanned = make_scanned_train_steps(cfg, mesh, K, mixing=mixing)
+        final, params_seq = scanned(params, toks, A_seq, tau_seq, m_seq,
+                                    eta_seq)
+
+        # scanned == sequential: same compiled body, bitwise.
+        for a, b in zip(jax.tree.leaves(seq_params),
+                        jax.tree.leaves(final)):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"scan-vs-sequential mixing={mixing}")
+        for t in range(K):
+            for a, b in zip(jax.tree.leaves(per_round[t]),
+                            jax.tree.leaves(
+                                jax.tree.map(lambda x: x[t], params_seq))):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"scan round {t} mixing={mixing}")
+
+        # scanned == single-host oracle (f32 reduction order differs).
+        for t in range(K):
+            for a, b in zip(jax.tree.leaves(
+                                jax.tree.map(lambda x: x[t], ref_seq)),
+                            jax.tree.leaves(
+                                jax.tree.map(lambda x: x[t], params_seq))):
+                np.testing.assert_allclose(
+                    np.asarray(b, np.float32), np.asarray(a, np.float32),
+                    rtol=2e-4, atol=2e-5,
+                    err_msg=f"oracle round {t} mixing={mixing}")
+        print(f"OK scan mixing={mixing}", flush=True)
+
+
+def check_server_mesh_scan() -> None:
+    """FederatedServer mesh routing: scan_rounds=True == sequential mesh
+    rounds, History record-for-record."""
+    mesh = make_debug_mesh((2, 2, 2))
+    n, T, B, S = 4, 2, 2, 16
+    cfg = _tiny_cfg()
+    model = Model(cfg)
+    params = model.init(jax.random.key(1))
+
+    def sampler(r, t):
+        return jnp.asarray(
+            r.integers(0, 128, size=(n, T, B, S + 1)), jnp.int32)
+
+    def run(scan_rounds, mixing):
+        net = D2DNetwork(n=n, c=2, k_range=(1, 1), p_fail=0.1)
+        scfg = ServerConfig(T=T, t_max=3, phi_max=0.5, seed=7,
+                            eta=lambda t: 0.05 / (1 + 0.5 * t))
+        server = FederatedServer(net, None, params, sampler, scfg,
+                                 algorithm="semidec",
+                                 mixing_backend=mixing,
+                                 scan_rounds=scan_rounds,
+                                 mesh=mesh, model_cfg=cfg)
+        hist = server.run(eval_fn=lambda prm: {
+            "l2": float(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                            for x in jax.tree.leaves(prm)))})
+        return server, hist
+
+    for mixing in ("einsum", "fused"):
+        s_seq, h_seq = run(False, mixing)
+        s_scan, h_scan = run(True, mixing)
+        assert len(h_seq.records) == len(h_scan.records)
+        for a, b in zip(h_seq.records, h_scan.records):
+            assert (a.t, a.m, a.m_actual, a.d2s, a.d2d, a.eta) == \
+                (b.t, b.m, b.m_actual, b.d2s, b.d2d, b.eta)
+            assert a.metrics["l2"] == b.metrics["l2"], (mixing, a.t)
+        for x, y in zip(jax.tree.leaves(s_seq.params),
+                        jax.tree.leaves(s_scan.params)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        print(f"OK server scan mixing={mixing}", flush=True)
+
+
+def main() -> None:
+    assert len(jax.devices()) == 8, jax.devices()
+    check_scan_equivalence()
+    check_server_mesh_scan()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,16 +1,28 @@
 """Property tests: the degree-only psi bounds dominate the true singular
 values (Prop. 5.1 / 5.2) in their stated regimes, and the sampling rule is
-correct and monotone."""
+correct and monotone.
 
+The jnp.linalg.svd suite at the bottom checks the per-singular-value
+claims (eqs. 10/11/15/16) against the device SVD of generated
+column-stochastic matrices over random degree sequences and cluster
+sizes -- hypothesis-driven where available (tests/hypothesis_compat.py
+skip-degrades them otherwise) with a seeded parametrized fallback that
+always runs."""
+
+import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis_compat import assume, given, settings, strategies as st
 
-from repro.core import (D2DNetwork, connectivity_factor, degree_stats,
-                        delete_edge_fraction, equal_neighbor_matrix,
-                        exact_phi_ell, k_regular_digraph, min_clients,
-                        psi_ell_from_stats, psi_general, psi_regular,
-                        psi_total, sample_clients, top_singular_values)
+from repro.core import (D2DNetwork, block_diagonal, connectivity_factor,
+                        degree_stats, delete_edge_fraction,
+                        equal_neighbor_matrix, exact_phi_ell,
+                        is_column_stochastic, k_regular_digraph,
+                        min_clients, psi_ell_from_stats, psi_general,
+                        psi_regular, psi_total, sample_clients,
+                        top_singular_values)
+from repro.core.bounds import (sigma1_sq_general, sigma1_sq_regular,
+                               sigma2_sq_general, sigma2_sq_regular)
 
 
 def _sigma_sq_sum(W):
@@ -148,3 +160,73 @@ def test_sample_clients_full_participation():
     verts = [np.arange(5), np.arange(5, 10)]
     tau, m_actual = sample_clients(rng, verts, m=10, n=10)
     assert m_actual == 10 and (tau == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# Per-singular-value domination vs jnp.linalg.svd (device SVD), over random
+# degree sequences and cluster sizes.
+# ---------------------------------------------------------------------------
+
+def _jnp_top2(A):
+    s = jnp.linalg.svd(jnp.asarray(A, jnp.float32), compute_uv=False)
+    return float(s[0]), float(s[1])
+
+
+def _check_degree_bounds_dominate_svd(sizes, p_del, seed):
+    """Build one cluster digraph per size (alpha >= 1/2 regime), assert the
+    per-sigma degree-only bounds dominate jnp.linalg.svd per cluster, and
+    the sorted union of the bounds dominates the top-two singular values of
+    the full block-diagonal column-stochastic network matrix."""
+    rng = np.random.default_rng(seed)
+    blocks, stats_list = [], []
+    for s in sizes:
+        k = int(rng.integers(s // 2 + 1, s + 1))
+        W = delete_edge_fraction(k_regular_digraph(s, k, rng), p_del, rng)
+        stats = degree_stats(W)
+        if stats.alpha < 0.5:       # outside Prop. 5.2's stated regime
+            return False
+        blocks.append(equal_neighbor_matrix(W))
+        stats_list.append(stats)
+
+    bound_pool = []
+    for A_l, stats in zip(blocks, stats_list):
+        s1_sq, s2_sq = (x ** 2 for x in _jnp_top2(A_l))
+        b1 = sigma1_sq_general(stats.varphi)
+        b2 = sigma2_sq_general(stats)
+        # eq. (15) / (16): per-singular-value domination
+        assert b1 + 1e-5 >= s1_sq, (stats, b1, s1_sq)
+        assert b2 + 1e-5 >= s2_sq, (stats, b2, s2_sq)
+        if stats.eps == 0.0 and stats.alpha > 0.5:
+            # eq. (10) / (11): exactly-regular regime, no O(eps^2) slack
+            assert sigma1_sq_regular(stats.eps) + 1e-5 >= s1_sq
+            assert sigma2_sq_regular(stats.eps, stats.alpha) + 1e-5 >= s2_sq
+        bound_pool.extend([b1, b2])
+
+    A = block_diagonal(blocks)
+    assert is_column_stochastic(A)
+    s1_sq, s2_sq = (x ** 2 for x in _jnp_top2(A))
+    top2_bounds = sorted(bound_pool, reverse=True)[:2]
+    # the network matrix's singular values are the union of the cluster
+    # blocks'; sorted per-block bounds therefore dominate the sorted union
+    assert top2_bounds[0] + 1e-5 >= s1_sq
+    assert top2_bounds[0] + top2_bounds[1] + 1e-5 >= s1_sq + s2_sq
+    return True
+
+
+@given(st.lists(st.integers(6, 14), min_size=1, max_size=3),
+       st.floats(0.0, 0.25), st.integers(0, 2**31))
+@settings(max_examples=40, deadline=None)
+def test_degree_bounds_dominate_jnp_svd(sizes, p_del, seed):
+    assume(_check_degree_bounds_dominate_svd(sizes, p_del, seed))
+
+
+@pytest.mark.parametrize("sizes,p_del,seed", [
+    ([8], 0.0, 0),             # single exactly-regular cluster
+    ([6, 10], 0.1, 1),         # two clusters, mild link failures
+    ([12, 7, 9], 0.2, 4),      # three clusters, heavier failures
+    ([14], 0.25, 3),
+])
+def test_degree_bounds_dominate_jnp_svd_seeded(sizes, p_del, seed):
+    """Non-hypothesis fallback of the property above (always runs)."""
+    assert _check_degree_bounds_dominate_svd(sizes, p_del, seed), \
+        "seeded case fell outside the alpha >= 1/2 regime; pick a new seed"

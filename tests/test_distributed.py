@@ -39,6 +39,7 @@ def _run(args, env_extra=None, timeout=560):
 # ---------------------------------------------------------------------------
 
 @pytest.mark.slow
+@pytest.mark.mesh
 @needs_mesh_api
 def test_mesh_train_step_matches_reference():
     r = _run([os.path.join(HELPERS, "dist_equivalence.py")],
@@ -54,6 +55,7 @@ def test_mesh_train_step_matches_reference():
 
 
 @pytest.mark.slow
+@pytest.mark.mesh
 @needs_mesh_api
 def test_sp_mlp_matches_plain():
     r = _run([os.path.join(HELPERS, "sp_mlp_equivalence.py")],
@@ -64,6 +66,7 @@ def test_sp_mlp_matches_plain():
 
 
 @pytest.mark.slow
+@pytest.mark.mesh
 @needs_mesh_api
 def test_expert_parallel_moe_matches_oracle():
     r = _run([os.path.join(HELPERS, "moe_ep_equivalence.py")],
@@ -75,6 +78,7 @@ def test_expert_parallel_moe_matches_oracle():
 
 
 @pytest.mark.slow
+@pytest.mark.mesh
 @needs_mesh_api
 def test_mesh_serve_steps_match_reference():
     r = _run([os.path.join(HELPERS, "serve_equivalence.py")],
@@ -90,6 +94,7 @@ def test_mesh_serve_steps_match_reference():
 # ---------------------------------------------------------------------------
 
 @pytest.mark.slow
+@pytest.mark.mesh
 @needs_mesh_api
 def test_dryrun_driver_writes_artifact(tmp_path):
     out = str(tmp_path / "dry")

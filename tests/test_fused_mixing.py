@@ -249,7 +249,8 @@ def test_scanned_rounds_bitwise_identical_to_sequential():
         np.testing.assert_array_equal(np.asarray(params_seq["x"][t]), seq[t])
 
 
-def _server_pair(scan_rounds, mixing_backend="einsum"):
+def _server_pair(scan_rounds, mixing_backend="einsum",
+                 record_mixed=False):
     rng = np.random.default_rng(11)
     n, c, p, T = 12, 2, 4, 3
     targets = rng.standard_normal((n, p)).astype(np.float32)
@@ -265,7 +266,8 @@ def _server_pair(scan_rounds, mixing_backend="einsum"):
     server = FederatedServer(net, quad_loss, {"x": jnp.zeros(p)}, sampler,
                              cfg, algorithm="semidec",
                              mixing_backend=mixing_backend,
-                             scan_rounds=scan_rounds)
+                             scan_rounds=scan_rounds,
+                             record_mixed=record_mixed)
     x_star = targets.mean(axis=0)
     hist = server.run(eval_fn=lambda prm: {
         "gap": float(jnp.sum((prm["x"] - x_star) ** 2))})
@@ -298,3 +300,175 @@ def test_server_fused_backend_converges():
 def test_make_round_fn_rejects_unknown_backend():
     with pytest.raises(ValueError):
         make_round_fn(quad_loss, mixing_backend="nope")
+
+
+# ---------------------------------------------------------------------------
+# aggregate-only round variant (ROADMAP: server rounds that never record
+# per-client mixed deltas dispatch kernels.mixing.ops.aggregate)
+# ---------------------------------------------------------------------------
+
+def test_round_fn_aggregate_matches_einsum_and_returns_no_mixed():
+    rng = np.random.default_rng(12)
+    n, p, T, B, K = 6, 5, 3, 2, 3
+    batches, As, taus, ms = _round_inputs(rng, n, p, T, B, K)
+    eta = jnp.float32(0.1)
+    ref_fn = make_round_fn(quad_loss)
+    agg_fn = make_round_fn(quad_loss, mixing_backend="aggregate", chunk=256)
+    ref_p = agg_p = {"x": jnp.zeros(p)}
+    for t in range(K):
+        ref_p, _ = ref_fn(ref_p, batches[t], As[t], taus[t], ms[t], eta)
+        agg_p, mixed = agg_fn(agg_p, batches[t], As[t], taus[t], ms[t], eta)
+        assert mixed is None          # never materialized
+    np.testing.assert_allclose(np.asarray(agg_p["x"]),
+                               np.asarray(ref_p["x"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("requested,recorded,effective", [
+    ("fused", False, "aggregate"),
+    ("pallas", False, "aggregate"),
+    ("fused", True, "fused"),
+    ("einsum", False, "einsum"),
+])
+def test_server_backend_dispatch(requested, recorded, effective):
+    rng = np.random.default_rng(13)
+    net = D2DNetwork(n=12, c=2, k_range=(4, 6), p_fail=0.1)
+    cfg = ServerConfig(T=2, t_max=1, seed=0)
+    server = FederatedServer(
+        net, quad_loss, {"x": jnp.zeros(4)},
+        lambda r, t: (jnp.asarray(r.standard_normal((12, 2, 2, 4)),
+                                  jnp.float32),),
+        cfg, algorithm="semidec", mixing_backend=requested,
+        record_mixed=recorded)
+    assert server.effective_backend == effective
+
+
+def test_server_aggregate_history_matches_two_pass():
+    """Regression pin for the aggregate-only dispatch: History must be
+    record-for-record equivalent to the two-pass (record_mixed=True)
+    path -- same plans, ledger, and metrics up to f32 reduction order."""
+    _, h_two = _server_pair(scan_rounds=False, mixing_backend="fused",
+                            record_mixed=True)
+    _, h_agg = _server_pair(scan_rounds=False, mixing_backend="fused",
+                            record_mixed=False)
+    assert len(h_two.records) == len(h_agg.records)
+    for a, b in zip(h_two.records, h_agg.records):
+        assert (a.t, a.m, a.m_actual, a.d2s, a.d2d, a.eta,
+                a.psi_bound) == (b.t, b.m, b.m_actual, b.d2s, b.d2d,
+                                 b.eta, b.psi_bound)
+        assert a.metrics["gap"] == pytest.approx(b.metrics["gap"],
+                                                 rel=1e-5, abs=1e-6)
+    np.testing.assert_array_equal(h_two.ledger.cumulative_cost(),
+                                  h_agg.ledger.cumulative_cost())
+
+
+def test_server_aggregate_scan_rounds_compose():
+    """scan_rounds + the aggregate-only backend: one dispatch, same
+    History semantics."""
+    s_seq, h_seq = _server_pair(scan_rounds=False, mixing_backend="fused")
+    s_scan, h_scan = _server_pair(scan_rounds=True, mixing_backend="fused")
+    assert s_seq.effective_backend == s_scan.effective_backend == "aggregate"
+    np.testing.assert_array_equal(np.asarray(s_seq.params["x"]),
+                                  np.asarray(s_scan.params["x"]))
+    for a, b in zip(h_seq.records, h_scan.records):
+        assert a.metrics["gap"] == pytest.approx(b.metrics["gap"],
+                                                 rel=1e-6, abs=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# packed-buffer payload bytes + shard-aligned padding
+# ---------------------------------------------------------------------------
+
+@pytest.mark.xfail(
+    strict=False,
+    reason="per-dtype buffer groups are a ROADMAP open item: mixed-dtype "
+           "trees pack at jnp.result_type of the leaves, so one fp32 leaf "
+           "promotes a bf16-majority payload to fp32")
+def test_pack_mixed_dtype_does_not_promote_payload_bytes():
+    rng = np.random.default_rng(14)
+    n = 4
+    tree = {f"bf16_{i}": jnp.asarray(rng.standard_normal((n, 1000)),
+                                     jnp.bfloat16) for i in range(3)}
+    tree["fp32_bias"] = jnp.asarray(rng.standard_normal((n, 16)),
+                                    jnp.float32)
+    spec = packing.pack_spec(tree)
+    buf = packing.pack(tree, spec)
+    ideal = sum(np.prod(l.shape) * l.dtype.itemsize
+                for l in jax.tree.leaves(tree))
+    # generous padding allowance; fp32 promotion blows straight past it
+    assert buf.nbytes <= 1.25 * ideal
+
+
+def test_pack_mixed_dtype_round_trip_stays_exact():
+    """Whatever the packed dtype, unpack must restore per-leaf dtypes and
+    values exactly (bf16 -> fp32 -> bf16 is lossless)."""
+    rng = np.random.default_rng(15)
+    n = 3
+    tree = {"a": jnp.asarray(rng.standard_normal((n, 40)), jnp.bfloat16),
+            "b": jnp.asarray(rng.standard_normal((n, 7)), jnp.float32)}
+    spec = packing.pack_spec(tree)
+    assert spec.dtype == jnp.float32          # promoted (ROADMAP)
+    back = packing.unpack(packing.pack(tree, spec), spec)
+    for k in tree:
+        assert back[k].dtype == tree[k].dtype
+        np.testing.assert_array_equal(np.asarray(back[k], np.float32),
+                                      np.asarray(tree[k], np.float32))
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4, 8])
+def test_pack_shard_aligned_round_trip(shards):
+    rng = np.random.default_rng(16)
+    tree = _tree(rng, 6)
+    spec = packing.pack_spec(tree, shards=shards)
+    assert spec.padded % (128 * shards) == 0
+    assert (spec.padded // shards) % 128 == 0   # per-shard lane alignment
+    buf = packing.pack(tree, spec)
+    assert buf.shape == (6, spec.padded)
+    back = packing.unpack(buf, spec)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+    # aggregate-row unpack ignores the shard padding as well
+    row = jnp.arange(spec.padded, dtype=jnp.float32)
+    flat = np.concatenate([np.asarray(l).ravel()
+                           for l in jax.tree.leaves(
+                               packing.unpack_row(row, spec))])
+    np.testing.assert_array_equal(flat, np.asarray(row)[:spec.total])
+
+
+def test_pack_spec_cache_distinguishes_shards():
+    rng = np.random.default_rng(17)
+    tree = _tree(rng, 5)
+    s1 = packing.pack_spec(tree)
+    s2 = packing.pack_spec(tree, shards=4)
+    assert s1 is not s2 and s2 is packing.pack_spec(tree, shards=4)
+    assert s2.padded >= s1.padded
+
+
+@given(st.lists(st.integers(1, 60), min_size=1, max_size=5),
+       st.integers(1, 8), st.integers(1, 6), st.integers(0, 2**31))
+@settings(max_examples=25, deadline=None)
+def test_pack_shard_aligned_round_trip_property(sizes, shards, n, seed):
+    rng = np.random.default_rng(seed)
+    tree = [jnp.asarray(rng.standard_normal((n, s)), jnp.float32)
+            for s in sizes]
+    spec = packing.pack_spec(tree, shards=shards)
+    assert spec.padded % (128 * shards) == 0
+    back = packing.unpack(packing.pack(tree, spec), spec)
+    for a, b in zip(tree, back):
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(a))
+
+
+def test_pack_spec_rejects_bad_shards():
+    rng = np.random.default_rng(18)
+    with pytest.raises(ValueError):
+        packing.pack_spec(_tree(rng, 2), shards=0)
+
+
+def test_server_rejects_contradictory_record_mixed():
+    net = D2DNetwork(n=12, c=2, k_range=(4, 6), p_fail=0.1)
+    cfg = ServerConfig(T=2, t_max=1, seed=0)
+    with pytest.raises(ValueError, match="record_mixed"):
+        FederatedServer(net, quad_loss, {"x": jnp.zeros(4)},
+                        lambda r, t: None, cfg, algorithm="semidec",
+                        mixing_backend="aggregate", record_mixed=True)
