@@ -28,6 +28,12 @@ instead: each worker receives only its ``p/W`` column shard,
 ``(W-1)/W * 4p`` bytes in ONE collective -- exactly half the cross-worker
 traffic and 1/L-th the launches (the re-replication is deferred to the
 next round's broadcast, which the train step performs anyway).
+
+Per-dtype payload bytes (``grouped_payload_rows``): the dtype-grouped
+packed layout is MEASURED against the promoted one-buffer layout it
+replaced -- a bf16-majority tree ships ~0.5x the promoted bytes --
+and the numbers land in BENCH_mixing.json, where the CI baseline check
+pins them against regression.
 """
 
 from __future__ import annotations
@@ -38,10 +44,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.mixing.ops import aggregate, mix, mix_aggregate
+from repro.fl import packing
+from repro.kernels.mixing.ops import (aggregate, aggregate_grouped, mix,
+                                      mix_aggregate)
 from repro.kernels.mixing.ref import mix_ref
 
-__all__ = ["run", "traffic_model", "mesh_traffic_model"]
+__all__ = ["run", "traffic_model", "mesh_traffic_model",
+           "grouped_payload_rows"]
 
 # launch count for the per-leaf psum schedule in the reported model: a
 # representative LM delta-tree leaf count (the packed fused_rs schedule
@@ -92,6 +101,64 @@ def _time(fn, reps=3):
     for _ in range(reps):
         jax.block_until_ready(fn())
     return (time.perf_counter() - t0) / reps * 1e6
+
+
+def grouped_payload_rows(quiet: bool = False):
+    """MEASURED per-dtype payload bytes: the dtype-grouped packed layout
+    (``repro.fl.packing``) vs the promoted one-buffer layout it replaced.
+
+    The promoted layout packs every leaf at ``jnp.result_type`` of the
+    tree -- fp32 whenever any leaf is fp32 -- so a bf16-majority LM tree
+    ships ~2x its ideal bytes.  Grouping packs each dtype at native
+    width; these rows pin the measured ratio in BENCH_mixing.json (and
+    the CI baseline check fails if the packed bytes ever regress).
+    """
+    rng = np.random.default_rng(1)
+    rows = []
+    # (label, n, bf16 trailing cols per leaf x leaves, fp32 cols x leaves)
+    for label, n, bf16_shape, fp32_shape in (
+            ("bf16-majority-lm", 16, (65_536, 4), (1_024, 2)),
+            ("bf16-only", 16, (65_536, 4), (0, 0)),
+            ("fp32-cnn", 70, (0, 0), (23_713, 2))):
+        tree = {}
+        for i in range(bf16_shape[1]):
+            tree[f"w{i}"] = jnp.asarray(
+                rng.standard_normal((n, bf16_shape[0])), jnp.bfloat16)
+        for i in range(fp32_shape[1]):
+            tree[f"b{i}"] = jnp.asarray(
+                rng.standard_normal((n, fp32_shape[0])), jnp.float32)
+        spec = packing.pack_spec(tree)
+        bufs = packing.pack(tree, spec)
+        measured = sum(b.nbytes for b in bufs)
+        assert measured == spec.nbytes(n)
+        ideal = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                    for l in jax.tree.leaves(tree))
+        # the one-buffer layout this replaced: every leaf at result_type
+        promoted = packing.promoted_nbytes(spec, n)
+
+        A = jnp.eye(n, dtype=jnp.float32)
+        tau = jnp.ones(n, jnp.float32)
+        m = jnp.float32(n)
+        t_agg = _time(lambda: aggregate_grouped(A, tau, m, bufs))
+        row = dict(kind="grouped_payload", layout=label, n=n,
+                   n_groups=spec.n_groups,
+                   group_dtypes=[str(jnp.dtype(g.dtype)) for g in
+                                 spec.groups],
+                   bytes_grouped=int(measured), bytes_promoted=int(promoted),
+                   bytes_ideal=int(ideal),
+                   grouped_over_ideal=measured / ideal,
+                   promoted_over_grouped=promoted / measured,
+                   us_agg_grouped_interp=t_agg,
+                   kernel_launches=spec.n_groups)
+        rows.append(row)
+        if not quiet:
+            print(f"{label:18s} n={n:3d} groups={spec.n_groups} "
+                  f"grouped={measured/1e6:7.3f}MB "
+                  f"promoted={promoted/1e6:7.3f}MB "
+                  f"(x{promoted/measured:.2f} saved) "
+                  f"ideal-overhead x{measured/ideal:.3f} "
+                  f"agg={t_agg:9.1f}us/{spec.n_groups} launches")
+    return rows
 
 
 def run(quiet: bool = False):
@@ -162,6 +229,9 @@ def run(quiet: bool = False):
                   f" x{m['collective_launches_psum']} launches   "
                   f"fused_rs={m['bytes_reduce_scatter_per_worker']/1e6:7.2f}MB"
                   f" x1 launch   ratio x{m['cross_worker_ratio']:.2f}")
+        print("\nper-dtype grouped packing: measured payload bytes vs the "
+              "promoted one-buffer layout")
+    rows.extend(grouped_payload_rows(quiet=quiet))
     return rows
 
 

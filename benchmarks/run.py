@@ -6,11 +6,19 @@
   mixing_kernel   -- Pallas D2D-mixing kernel vs oracle
   roofline_table  -- §Roofline terms from dry-run artifacts (if present)
 
-``python -m benchmarks.run [--only NAME] [--fast] [--json-out PATH]``
+``python -m benchmarks.run [--only NAME] [--fast] [--json-out PATH]
+[--check-baseline PATH]``
 
 Results are written to ``BENCH_mixing.json`` by default so the perf
-trajectory (fused vs two-pass mixing wall time + bytes-moved model) is
-tracked across PRs; pass ``--json-out ''`` to skip the artifact.
+trajectory (fused vs two-pass mixing wall time + bytes-moved model +
+measured per-dtype grouped payload bytes) is tracked across PRs; pass
+``--json-out ''`` to skip the artifact.
+
+``--check-baseline PATH`` compares the fresh mixing_kernel payload-byte
+fields against a committed baseline (the repo's BENCH_mixing.json) and
+exits non-zero if any modeled or measured payload bytes regressed --
+wall times are machine-dependent and deliberately NOT compared.  CI runs
+this on every push.
 """
 
 from __future__ import annotations
@@ -25,6 +33,59 @@ from . import (comm_cost, convergence, mixing_kernel, roofline_table,
 BENCHES = ("singular_bounds", "topology_ablation", "comm_cost",
            "convergence", "mixing_kernel", "roofline_table")
 
+# payload-byte fields pinned by --check-baseline: deterministic models /
+# measurements (never wall times), so any increase is a real regression
+_BYTE_FIELDS = ("bytes_two_pass", "bytes_fused", "bytes_agg_only",
+                "bytes_grouped", "bytes_psum_per_worker",
+                "bytes_reduce_scatter_per_worker")
+
+
+def _row_key(row):
+    """Stable identity of a mixing_kernel result row across runs."""
+    if row.get("kind") == "grouped_payload":
+        return ("grouped_payload", row.get("layout"), row.get("n"))
+    return ("kernel", row.get("n"), row.get("p"), row.get("dtype"))
+
+
+def check_baseline(new_rows, baseline_path) -> list:
+    """Compare payload-byte fields of fresh mixing_kernel rows against the
+    committed baseline; returns a list of human-readable regressions.
+
+    Every baseline row and every baseline byte field must find a
+    counterpart in the fresh results -- a pinned row/field silently
+    disappearing from the benchmark would otherwise turn the gate green
+    while checking nothing."""
+    with open(baseline_path) as f:
+        base_rows = json.load(f).get("mixing_kernel", [])
+    base = {_row_key(r): r for r in base_rows}
+    new = {_row_key(r): r for r in new_rows}
+    problems = []
+    for key, old in base.items():
+        row = new.get(key)
+        if row is None:
+            problems.append(
+                f"{key}: baseline row has no counterpart in the fresh "
+                "results -- pinned benchmark entry dropped or renamed")
+            continue
+        for field in _BYTE_FIELDS:
+            if field not in old:
+                continue
+            if field not in row:
+                problems.append(
+                    f"{key}: pinned field {field} missing from the fresh "
+                    "results")
+                continue
+            new_v, old_v = float(row[field]), float(old[field])
+            if new_v > old_v:
+                problems.append(
+                    f"{key}: {field} regressed "
+                    f"{old_v:.0f} -> {new_v:.0f} bytes")
+    if not base:
+        problems.append(
+            f"no mixing_kernel rows in {baseline_path} -- baseline stale "
+            "or malformed")
+    return problems
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
@@ -37,6 +98,10 @@ def main(argv=None) -> int:
                          "bench runs (tracking the perf trajectory across "
                          "PRs) and to no artifact otherwise; pass '' to "
                          "disable")
+    ap.add_argument("--check-baseline", default=None, metavar="PATH",
+                    help="compare fresh mixing_kernel payload bytes "
+                         "against this committed baseline JSON and exit "
+                         "non-zero on regression (CI gate)")
     args = ap.parse_args(argv)
 
     results = {}
@@ -79,6 +144,21 @@ def main(argv=None) -> int:
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(results, f, indent=1, default=str)
+
+    if args.check_baseline is not None:
+        if "mixing_kernel" not in results:
+            print("--check-baseline: mixing_kernel did not run")
+            return 2
+        problems = check_baseline(results["mixing_kernel"],
+                                  args.check_baseline)
+        if problems:
+            print("\npayload-bytes regressions vs "
+                  f"{args.check_baseline}:")
+            for p in problems:
+                print(f"  {p}")
+            return 2
+        print(f"\npayload bytes OK vs baseline {args.check_baseline}")
+
     print("\nall benchmarks complete")
     return 0
 

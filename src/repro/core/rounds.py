@@ -23,13 +23,16 @@ backends (``make_round_fn(..., mixing_backend=...)``):
               dtype, matching the Pallas kernels.
   'pallas' -- leaf-wise Pallas mixing kernel (one launch per leaf) +
               einsum aggregate.
-  'fused'  -- packed one-pass path: the delta pytree is flattened into a
-              single lane-aligned (n, P_pad) buffer (``repro.fl.packing``)
-              and the fused kernel streams it ONCE, emitting both the
-              mixed deltas (eq. 3) and the tau-weighted aggregate row
-              (eq. 4) in a single launch per round.
-  'aggregate' -- aggregate-only fast path: same packed buffer, but the
-              kernel computes only ``((tau^T A)/m) @ X`` -- the mixed
+  'fused'  -- packed one-pass path: the delta pytree is flattened into
+              per-dtype lane-aligned (n, P_pad_g) buffers
+              (``repro.fl.packing``) and the fused kernel streams each
+              ONCE at its native dtype, emitting both the mixed deltas
+              (eq. 3) and the tau-weighted aggregate rows (eq. 4) in one
+              launch per dtype group (one per round for homogeneous
+              trees; mixed bf16/fp32 trees never promote to fp32 on the
+              wire).
+  'aggregate' -- aggregate-only fast path: same packed buffers, but the
+              kernel computes only ``((tau^T A)/m) @ X_g`` -- the mixed
               deltas are never materialized and the round returns ``None``
               in their place (~3x less payload traffic than two-pass; see
               BENCH_mixing.json).  The ``FederatedServer`` selects this
@@ -46,7 +49,7 @@ The multi-device shard_map implementation with the same semantics lives in
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -75,7 +78,10 @@ def local_sgd(loss_fn: LossFn, params: PyTree, batches: PyTree,
 
     def step(p, batch):
         g = grad_fn(p, batch)
-        return jax.tree.map(lambda x, gg: x - eta * gg, p, g), None
+        # keep each leaf at its own dtype (eta is fp32: a bare `x - eta*g`
+        # would promote bf16 params) -- matches the mesh train step
+        return jax.tree.map(lambda x, gg: (x - eta * gg).astype(x.dtype),
+                            p, g), None
 
     final, _ = jax.lax.scan(step, params, batches)
     return final
@@ -133,23 +139,26 @@ def global_update(global_params: PyTree, mixed: PyTree, tau: jnp.ndarray,
 
 def fused_mix_update(global_params: PyTree, deltas: PyTree, A: jnp.ndarray,
                      tau: jnp.ndarray, m: jnp.ndarray, *, chunk: int = 2048,
-                     interpret: bool = True) -> Tuple[PyTree, PyTree]:
-    """One-pass eq. 3 + eq. 4 over the packed delta buffer.
+                     interpret: Optional[bool] = None
+                     ) -> Tuple[PyTree, PyTree]:
+    """One-pass eq. 3 + eq. 4 over the packed delta buffers.
 
-    Packs the delta pytree into a single (n, P_pad) buffer, launches the
-    fused Pallas kernel once (streaming the payload through VMEM a single
-    time), and returns ``(new_global_params, mixed_deltas)``.
+    Packs the delta pytree into per-dtype (n, P_pad_g) buffers, launches
+    the fused Pallas kernel once per dtype group (streaming each group's
+    payload through VMEM a single time at its native dtype), and returns
+    ``(new_global_params, mixed_deltas)``.
     """
     # deferred: repro.fl lazily imports back into repro.core at package init
     from repro.fl import packing
-    from repro.kernels.mixing.ops import mix_aggregate
+    from repro.kernels.mixing.ops import mix_aggregate_grouped
 
     spec = packing.pack_spec(deltas)
-    buf = packing.pack(deltas, spec)
-    mixed_buf, agg_row = mix_aggregate(A, tau, m, buf, chunk=chunk,
-                                       interpret=interpret)
-    mixed = packing.unpack(mixed_buf, spec)
-    new_global = packing.apply_aggregate_row(global_params, agg_row, spec)
+    bufs = packing.pack(deltas, spec)
+    mixed_bufs, agg_rows = mix_aggregate_grouped(A, tau, m, bufs,
+                                                 chunk=chunk,
+                                                 interpret=interpret)
+    mixed = packing.unpack(mixed_bufs, spec)
+    new_global = packing.apply_aggregate_row(global_params, agg_rows, spec)
     return new_global, mixed
 
 
@@ -167,13 +176,13 @@ def _mix_and_update(global_params, deltas, A, tau, m, *, mixing_backend,
                                 chunk=chunk, interpret=interpret)
     if mixing_backend == "aggregate":
         from repro.fl import packing
-        from repro.kernels.mixing.ops import aggregate
+        from repro.kernels.mixing.ops import aggregate_grouped
 
         spec = packing.pack_spec(deltas)
-        buf = packing.pack(deltas, spec)
-        agg_row = aggregate(A, tau, m, buf, chunk=chunk,
-                            interpret=interpret)
-        return packing.apply_aggregate_row(global_params, agg_row,
+        bufs = packing.pack(deltas, spec)
+        agg_rows = aggregate_grouped(A, tau, m, bufs, chunk=chunk,
+                                     interpret=interpret)
+        return packing.apply_aggregate_row(global_params, agg_rows,
                                            spec), None
     raise ValueError(
         f"mixing_backend must be one of {MIXING_BACKENDS}, "
@@ -182,7 +191,7 @@ def _mix_and_update(global_params, deltas, A, tau, m, *, mixing_backend,
 
 def make_round_fn(loss_fn: LossFn, jit: bool = True,
                   mixing_backend: str = "einsum", *, chunk: int = 2048,
-                  interpret: bool = True):
+                  interpret: Optional[bool] = None):
     """Build the jitted global-round function.
 
     Signature: ``round_fn(global_params, client_batches, A, tau, m, eta)``
@@ -196,7 +205,9 @@ def make_round_fn(loss_fn: LossFn, jit: bool = True,
 
     ``mixing_backend`` selects the eq. 3 + eq. 4 implementation (module
     docstring); ``chunk``/``interpret`` configure the Pallas backends and
-    are ignored by 'einsum'.
+    are ignored by 'einsum'.  ``interpret=None`` (default) resolves per
+    platform -- compiled on TPU, interpreter elsewhere
+    (``repro.kernels.mixing.ops.default_interpret``).
     """
     if mixing_backend not in MIXING_BACKENDS:
         raise ValueError(
@@ -216,7 +227,8 @@ def make_round_fn(loss_fn: LossFn, jit: bool = True,
 
 def make_scanned_rounds(loss_fn: LossFn, K: int, jit: bool = True,
                         mixing_backend: str = "einsum", *,
-                        chunk: int = 2048, interpret: bool = True):
+                        chunk: int = 2048,
+                        interpret: Optional[bool] = None):
     """Build a driver that runs ``K`` global rounds in one ``lax.scan``.
 
     The host builds the whole time-varying topology sequence up front and

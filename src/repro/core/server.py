@@ -15,8 +15,10 @@ All three share the same compiled round; they differ only in the runtime
 Two performance knobs thread through to ``repro.core.rounds``:
 
 * ``mixing_backend`` ('einsum' | 'pallas' | 'fused') selects the eq. 3+4
-  implementation -- 'fused' packs the delta pytree into one flat buffer
-  and streams it through the fused Pallas kernel once per round.  Because
+  implementation -- 'fused' packs the delta pytree into per-dtype flat
+  buffers and streams each through the fused Pallas kernel once per
+  round (``chunk``/``interpret`` tune the kernels; ``interpret=None``
+  resolves per platform, compiled on TPU).  Because
   ``History`` never records per-client mixed deltas, the kernel backends
   are upgraded to the aggregate-only fast path ('aggregate',
   ``kernels.mixing.ops.aggregate``: ~3x less payload traffic) unless the
@@ -115,7 +117,8 @@ class FederatedServer:
                  batch_sampler: BatchSampler, config: ServerConfig,
                  algorithm: str = "semidec", jit: bool = True,
                  mixing_backend: str = "einsum", scan_rounds: bool = False,
-                 record_mixed: bool = False, mesh=None, model_cfg=None):
+                 record_mixed: bool = False, mesh=None, model_cfg=None,
+                 chunk: int = 2048, interpret: Optional[bool] = None):
         if algorithm not in ALGORITHMS:
             raise ValueError(f"algorithm must be one of {ALGORITHMS}")
         if algorithm in ("fedavg", "colrel") and config.m_fixed is None:
@@ -129,6 +132,8 @@ class FederatedServer:
         self.scan_rounds = scan_rounds
         self._loss_fn = loss_fn
         self._jit = jit
+        self._chunk = chunk
+        self._interpret = interpret
         self.mesh = mesh
         self.model_cfg = model_cfg
         self.rng = np.random.default_rng(config.seed)
@@ -169,7 +174,8 @@ class FederatedServer:
             self.effective_backend = "aggregate"
         self._mesh_step = None
         self.round_fn = make_round_fn(loss_fn, jit=jit,
-                                      mixing_backend=self.effective_backend)
+                                      mixing_backend=self.effective_backend,
+                                      chunk=chunk, interpret=interpret)
 
     # -- one global aggregation round -------------------------------------
 
@@ -276,7 +282,8 @@ class FederatedServer:
         else:
             scanned = make_scanned_rounds(
                 self._loss_fn, cfg.t_max, jit=self._jit,
-                mixing_backend=self.effective_backend)
+                mixing_backend=self.effective_backend,
+                chunk=self._chunk, interpret=self._interpret)
         self.params, params_seq = scanned(self.params, batches_seq, A_seq,
                                           tau_seq, m_seq, eta_seq)
 

@@ -5,9 +5,11 @@ single-host oracle with identical semantics."""
 from .distributed import (MIXINGS, make_train_step,
                           make_scanned_train_steps, make_prefill_step,
                           make_decode_step, build_topology_inputs)
-from .packing import PackSpec, pack, pack_spec, unpack, unpack_row
+from .packing import (GroupSpec, GroupedPackSpec, apply_aggregate_row,
+                      pack, pack_spec, unpack, unpack_row)
 
 __all__ = ["MIXINGS", "make_train_step", "make_scanned_train_steps",
            "make_prefill_step", "make_decode_step",
-           "build_topology_inputs", "PackSpec", "pack", "pack_spec",
-           "unpack", "unpack_row"]
+           "build_topology_inputs", "GroupSpec", "GroupedPackSpec",
+           "pack", "pack_spec", "unpack", "unpack_row",
+           "apply_aggregate_row"]

@@ -22,20 +22,21 @@ step serves every round of Algorithm 1, FedAvg (A=I) and COLREL (fixed m).
        'einsum' -- jit-level dense matmul over the stacked client axis
                    (XLA chooses the schedule; paper eq. (3) verbatim).
        'fused'  -- jit-level one-pass sibling of 'einsum': packs the
-                   delta pytree into a single lane-aligned (n, P) buffer
-                   (``repro.fl.packing``) and applies the algebraic
+                   delta pytree into per-dtype lane-aligned (n, P_g)
+                   buffers (``repro.fl.packing``; no result_type
+                   promotion on the wire) and applies the algebraic
                    identity ``sum_i tau_i (A X)_i = (tau^T A) X`` so the
                    payload is read ONCE and the mixed deltas are never
                    materialized (the train step only returns the new
-                   global params).  GSPMD shards the packed matmul.
+                   global params).  GSPMD shards the packed matmuls.
        'fused_rs' -- manual shard_map version of 'fused': each worker
-                   scales its OWN packed row by its precombined D2S
-                   weight ``w_i = ((tau^T A)/m)_i`` and the (P,) aggregate
-                   row is REDUCE-SCATTERED over 'data' (ZeRO-style) +
-                   psum-ed over 'pod', so every worker receives only
-                   P/n_data columns instead of the full row a psum would
-                   deliver (2x less cross-worker traffic than the
-                   per-leaf psum schedule; see
+                   scales its OWN packed rows by its precombined D2S
+                   weight ``w_i = ((tau^T A)/m)_i`` and each group's
+                   (P_g,) aggregate row is REDUCE-SCATTERED over 'data'
+                   (ZeRO-style) + psum-ed over 'pod', so every worker
+                   receives only P_g/n_data columns instead of the full
+                   row a psum would deliver (2x less cross-worker
+                   traffic than the per-leaf psum schedule; see
                    ``benchmarks.mixing_kernel.mesh_traffic_model``).
                    Mixed deltas are never materialized and no (n, n)
                    matmul runs on-device -- only an elementwise scale.
@@ -175,17 +176,21 @@ def _mix_and_aggregate(mesh, mixing: str, deltas: PyTree, A: jnp.ndarray,
 
     if mixing == "fused":
         # one-pass sibling of 'einsum': sum_i tau_i (A X)_i = (tau^T A) X.
-        # The packed buffer is read once and the (n, P) mixed intermediate
-        # is never formed -- the train step only needs the new global.
+        # Each dtype group's packed buffer is read once at its native
+        # width (no result_type promotion on the wire) and the (n, P)
+        # mixed intermediate is never formed -- the train step only needs
+        # the new global.
         from repro.fl import packing
         from repro.kernels.mixing.ops import combine_weights
 
         spec = packing.pack_spec(deltas)
-        buf = packing.pack(deltas, spec)                   # (n, P_pad)
+        bufs = packing.pack(deltas, spec)           # per-group (n, P_pad_g)
         w = combine_weights(A, tau, m)
-        agg_row = jnp.einsum("j,jp->p", w, buf.astype(jnp.float32),
-                             preferred_element_type=jnp.float32)
-        return packing.apply_aggregate_row(global_params, agg_row, spec)
+        agg_rows = tuple(
+            jnp.einsum("j,jp->p", w, b.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+            for b in bufs)
+        return packing.apply_aggregate_row(global_params, agg_rows, spec)
 
     if mixing == "fused_rs":
         # manual worker-sharded 'fused': worker i holds packed row X_i
@@ -198,22 +203,28 @@ def _mix_and_aggregate(mesh, mixing: str, deltas: PyTree, A: jnp.ndarray,
         from repro.fl import packing
         from repro.kernels.mixing.ops import combine_weights
 
+        # every group's P_pad_g is shard-aligned, so each per-dtype row
+        # reduce-scatters evenly over 'data' on its own
         spec = packing.pack_spec(deltas, shards=n_data)
-        buf = packing.pack(deltas, spec)                   # (n, P_pad)
+        bufs = packing.pack(deltas, spec)           # per-group (n, P_pad_g)
         w = combine_weights(A, tau, m)                     # (n,) fp32
 
-        def rs_body(b, wv):
-            contrib = wv[0] * b[0].astype(jnp.float32)     # (P_pad,)
-            part = jax.lax.psum_scatter(contrib, caxes[-1],
-                                        scatter_dimension=0, tiled=True)
-            if len(caxes) > 1:
-                part = jax.lax.psum(part, caxes[:-1])
-            return part
+        def rs_body(bs, wv):
+            outs = []
+            for b in bs:
+                contrib = wv[0] * b[0].astype(jnp.float32)  # (P_pad_g,)
+                part = jax.lax.psum_scatter(contrib, caxes[-1],
+                                            scatter_dimension=0, tiled=True)
+                if len(caxes) > 1:
+                    part = jax.lax.psum(part, caxes[:-1])
+                outs.append(part)
+            return tuple(outs)
 
-        agg_row = _shard_map(rs_body, mesh,
-                             in_specs=(P(caxes, None), P(caxes)),
-                             out_specs=P(caxes[-1]))(buf, w)
-        return packing.apply_aggregate_row(global_params, agg_row, spec)
+        agg_rows = _shard_map(
+            rs_body, mesh,
+            in_specs=(tuple(P(caxes, None) for _ in bufs), P(caxes)),
+            out_specs=tuple(P(caxes[-1]) for _ in bufs))(bufs, w)
+        return packing.apply_aggregate_row(global_params, agg_rows, spec)
 
     gspecs = shard_rules.param_specs(global_params, msize)
     if zero:

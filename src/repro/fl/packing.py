@@ -1,36 +1,44 @@
-"""Packed client-delta layout: one flat lane-aligned buffer per round.
+"""Packed client-delta layout: one flat lane-aligned buffer per *dtype
+group* per round.
 
 The round's D2D/D2S hot path is linear algebra over the *concatenation*
 of every client's flattened delta, but the deltas live as a pytree, so a
 leaf-wise implementation pays one pad -> kernel launch -> slice cycle per
-leaf (dozens for an LM).  This module flattens the whole tree into a
-single ``(n, P_pad)`` buffer -- P_pad lane-aligned (multiple of 128) --
-so the fused mixing kernel launches **once per round** regardless of the
-tree's shape, and caches the offset/shape metadata per tree structure so
-repeated rounds pay zero host-side re-planning.
+leaf (dozens for an LM).  This module flattens the tree into per-dtype
+``(n, P_pad_g)`` buffers -- each P_pad_g lane-aligned (multiple of 128)
+-- so the fused mixing kernel launches **once per dtype group** (once per
+round for the common dtype-homogeneous tree), and caches the layout
+metadata per tree structure so repeated rounds pay zero host-side
+re-planning.
+
+Grouping by dtype is a communication-cost decision, not a convenience:
+packing a mixed tree into ONE buffer forces ``jnp.result_type`` promotion
+(fp32 if any leaf is fp32), which doubles the payload bytes of a
+bf16-majority LM tree.  Per-dtype groups keep every leaf at its native
+width, so the bytes-on-the-wire model in ``benchmarks.mixing_kernel``
+transfers to mixed trees unchanged.  A dtype-homogeneous tree degenerates
+to a single group whose buffer is bit-for-bit today's one-buffer layout.
 
     spec  = pack_spec(deltas)          # cached per (treedef, shapes, ...)
-    spec  = pack_spec(deltas, shards=k)  # P_pad also divisible into k
-                                         # lane-aligned column blocks
-    buf   = pack(deltas, spec)         # (n, P_pad), one concat
-    tree  = unpack(buf, spec)          # exact inverse (slices + reshapes)
-    tree1 = unpack_row(row, spec)      # (P,) aggregate row -> param tree
+    spec  = pack_spec(deltas, shards=k)  # every P_pad_g also divisible
+                                         # into k lane-aligned blocks
+    bufs  = pack(deltas, spec)         # tuple of (n, P_pad_g), one concat
+                                       # per group
+    tree  = unpack(bufs, spec)         # exact inverse (slices + reshapes)
+    tree1 = unpack_row(rows, spec)     # per-group (P_g,) aggregate rows
+                                       # -> param tree
 
 ``pack``/``unpack`` are pure jnp and jit-safe (the spec is static
 metadata); under jit XLA fuses the concat/slice with neighbors, and the
-packed buffer is the layout the Pallas kernel streams directly.
-
-Mixed-dtype trees pack at ``jnp.result_type`` of the leaves (``unpack``
-restores per-leaf dtypes exactly): a mostly-bf16 tree with a few fp32
-leaves therefore streams as fp32, inflating payload bytes.  Per-dtype
-buffer groups are a ROADMAP open item; for the traffic numbers in
-BENCH_mixing.json to transfer, keep delta trees dtype-homogeneous.
+packed buffers are the layout the Pallas kernels stream directly.
+Groups are ordered by first appearance in treedef order and leaves keep
+treedef order inside their group, so the layout is deterministic.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -38,47 +46,94 @@ import numpy as np
 
 PyTree = Any
 
-__all__ = ["PackSpec", "pack_spec", "pack", "unpack", "unpack_row",
-           "apply_aggregate_row"]
+__all__ = ["GroupSpec", "GroupedPackSpec", "pack_spec", "pack", "unpack",
+           "unpack_row", "apply_aggregate_row", "promoted_nbytes"]
 
 _LANE = 128
 
 
 @dataclasses.dataclass(frozen=True)
-class PackSpec:
-    """Static layout metadata for a packed delta tree.
+class GroupSpec:
+    """Static layout of ONE dtype group inside a packed delta tree.
 
-    ``shapes``/``dtypes`` are per-leaf trailing shapes (client axis
-    stripped) and dtypes in treedef order; ``offsets[i]:offsets[i]+sizes[i]``
-    is leaf i's column range in the packed buffer.
+    ``leaf_ids`` are the flat (treedef-order) indices of the leaves this
+    group owns; ``shapes`` are their trailing shapes (client axis
+    stripped); ``offsets[i]:offsets[i]+sizes[i]`` is leaf i's column
+    range in the group's ``(n, padded)`` buffer.
     """
-    treedef: Any
+    dtype: Any
+    leaf_ids: Tuple[int, ...]
     shapes: Tuple[Tuple[int, ...], ...]
-    dtypes: Tuple[Any, ...]
     offsets: Tuple[int, ...]
     sizes: Tuple[int, ...]
-    total: int          # P   -- sum of leaf sizes
-    padded: int         # P_pad -- lane-aligned packed width
-    dtype: Any          # packed buffer dtype (result_type of the leaves)
+    total: int          # P_g   -- sum of leaf sizes
+    padded: int         # P_pad_g -- lane-aligned packed width
 
     @property
     def pad(self) -> int:
         return self.padded - self.total
 
 
-_SPEC_CACHE: Dict[Any, PackSpec] = {}
+@dataclasses.dataclass(frozen=True)
+class GroupedPackSpec:
+    """Static layout metadata for a packed delta tree: one ``GroupSpec``
+    per distinct leaf dtype, ordered by first appearance in treedef
+    order.  Hashable and jit-static, like the buffers it describes."""
+    treedef: Any
+    n_leaves: int
+    groups: Tuple[GroupSpec, ...]
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.groups)
+
+    @property
+    def total(self) -> int:
+        """Total real payload columns across groups."""
+        return sum(g.total for g in self.groups)
+
+    @property
+    def padded(self) -> int:
+        """Total packed columns across groups (sum of the P_pad_g)."""
+        return sum(g.padded for g in self.groups)
+
+    def nbytes(self, n: int) -> int:
+        """Total packed payload bytes for ``n`` clients -- the quantity
+        the per-dtype grouping exists to minimize."""
+        return sum(n * g.padded * jnp.dtype(g.dtype).itemsize
+                   for g in self.groups)
+
+
+def promoted_nbytes(spec: GroupedPackSpec, n: int,
+                    align: int = _LANE) -> int:
+    """Bytes the pre-grouping ONE-buffer layout would ship for ``n``
+    clients: every leaf cast to ``jnp.result_type`` of the tree (fp32 if
+    any leaf is fp32), lane-aligned.  The comparison baseline for
+    ``spec.nbytes`` -- used by benchmarks and the payload-bytes
+    regression tests, so the legacy-layout model lives in one place."""
+    dt = jnp.result_type(*[g.dtype for g in spec.groups])
+    cols = ((spec.total + align - 1) // align) * align
+    return n * cols * jnp.dtype(dt).itemsize
+
+
+_SPEC_CACHE: Dict[Any, GroupedPackSpec] = {}
 
 
 def pack_spec(deltas: PyTree, *, align: int = _LANE,
-              shards: int = 1) -> PackSpec:
+              shards: int = 1) -> GroupedPackSpec:
     """Build (or fetch the cached) layout spec for a per-client delta tree
     whose leaves share a leading client axis ``n``.
 
-    ``shards`` requests shard-aligned padding: ``P_pad`` becomes a multiple
-    of ``align * shards`` so the packed buffer splits evenly into ``shards``
-    lane-aligned column blocks -- required by the worker-sharded fused path
-    (``repro.fl.distributed`` mixing='fused_rs'), which reduce-scatters the
-    aggregate row over the mesh 'data' axis.
+    Leaves are partitioned into per-dtype groups; each group packs into
+    its own lane-aligned ``(n, P_pad_g)`` buffer at the leaves' native
+    dtype (no ``result_type`` promotion).
+
+    ``shards`` requests shard-aligned padding: every ``P_pad_g`` becomes a
+    multiple of ``align * shards`` so each group's buffer splits evenly
+    into ``shards`` lane-aligned column blocks -- required by the
+    worker-sharded fused path (``repro.fl.distributed`` mixing='fused_rs'),
+    which reduce-scatters each group's aggregate row over the mesh 'data'
+    axis.
     """
     if shards < 1:
         raise ValueError(f"shards must be >= 1, got {shards}")
@@ -91,55 +146,118 @@ def pack_spec(deltas: PyTree, *, align: int = _LANE,
     spec = _SPEC_CACHE.get(key)
     if spec is not None:
         return spec
-    sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
-    offsets = tuple(int(o) for o in np.cumsum((0,) + sizes[:-1]))
-    total = int(sum(sizes))
+
+    by_dtype: Dict[Any, list] = {}
+    for i, dt in enumerate(dtypes):         # dict preserves first-seen order
+        by_dtype.setdefault(dt, []).append(i)
+
     unit = align * shards
-    padded = ((total + unit - 1) // unit) * unit
-    spec = PackSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
-                    offsets=offsets, sizes=sizes, total=total,
-                    padded=padded, dtype=jnp.result_type(*dtypes))
+    groups = []
+    for dt, ids in by_dtype.items():
+        gshapes = tuple(shapes[i] for i in ids)
+        sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in gshapes)
+        offsets = tuple(int(o) for o in np.cumsum((0,) + sizes[:-1]))
+        total = int(sum(sizes))
+        padded = ((total + unit - 1) // unit) * unit
+        groups.append(GroupSpec(dtype=dt, leaf_ids=tuple(ids),
+                                shapes=gshapes, offsets=offsets,
+                                sizes=sizes, total=total, padded=padded))
+    spec = GroupedPackSpec(treedef=treedef, n_leaves=len(leaves),
+                           groups=tuple(groups))
     _SPEC_CACHE[key] = spec
     return spec
 
 
-def pack(deltas: PyTree, spec: PackSpec) -> jnp.ndarray:
-    """Flatten the delta tree into the (n, P_pad) packed buffer."""
-    leaves = jax.tree.leaves(deltas)
+def _validate_tree(leaves, treedef, spec: GroupedPackSpec) -> None:
+    if treedef != spec.treedef or len(leaves) != spec.n_leaves:
+        raise ValueError(
+            "pack: delta tree does not match the spec it was built for: "
+            f"spec has {spec.n_leaves} leaves / treedef {spec.treedef}, "
+            f"got {len(leaves)} leaves / treedef {treedef}. Build a fresh "
+            "spec with pack_spec(deltas).")
+    for g in spec.groups:
+        for i, shp in zip(g.leaf_ids, g.shapes):
+            leaf = leaves[i]
+            if tuple(leaf.shape[1:]) != shp or \
+                    jnp.dtype(leaf.dtype) != jnp.dtype(g.dtype):
+                raise ValueError(
+                    f"pack: leaf {i} has trailing shape "
+                    f"{tuple(leaf.shape[1:])} / dtype {leaf.dtype}, but the "
+                    f"spec expects {shp} / {jnp.dtype(g.dtype)}. Build a "
+                    "fresh spec with pack_spec(deltas).")
+
+
+def pack(deltas: PyTree, spec: GroupedPackSpec
+         ) -> Tuple[jnp.ndarray, ...]:
+    """Flatten the delta tree into per-dtype ``(n, P_pad_g)`` buffers
+    (one per spec group, in group order).
+
+    Raises ``ValueError`` if the tree's structure, trailing shapes, or
+    dtypes do not match the spec -- a mismatched spec would otherwise
+    silently scramble the layout.
+    """
+    leaves, treedef = jax.tree.flatten(deltas)
+    _validate_tree(leaves, treedef, spec)
     n = leaves[0].shape[0]
-    flat = [l.reshape(n, -1).astype(spec.dtype) for l in leaves]
-    if spec.pad:
-        flat.append(jnp.zeros((n, spec.pad), spec.dtype))
-    return jnp.concatenate(flat, axis=1)
+    bufs = []
+    for g in spec.groups:
+        flat = [leaves[i].reshape(n, -1) for i in g.leaf_ids]
+        if g.pad:
+            flat.append(jnp.zeros((n, g.pad), g.dtype))
+        bufs.append(jnp.concatenate(flat, axis=1))
+    return tuple(bufs)
 
 
-def unpack(buf: jnp.ndarray, spec: PackSpec) -> PyTree:
-    """Inverse of ``pack``: (n, P_pad) -> delta tree (leading axis n)."""
-    n = buf.shape[0]
-    leaves = [
-        buf[:, o:o + s].reshape((n,) + shp).astype(dt)
-        for o, s, shp, dt in zip(spec.offsets, spec.sizes, spec.shapes,
-                                 spec.dtypes)
-    ]
+def _as_group_tuple(bufs: Union[jnp.ndarray, Sequence[jnp.ndarray]],
+                    spec: GroupedPackSpec, what: str
+                    ) -> Tuple[jnp.ndarray, ...]:
+    """Normalize a per-group sequence (or a bare array for single-group
+    specs) to a tuple matching ``spec.groups``."""
+    if isinstance(bufs, (jnp.ndarray, np.ndarray)):
+        bufs = (bufs,)
+    bufs = tuple(bufs)
+    if len(bufs) != spec.n_groups:
+        raise ValueError(
+            f"{what}: expected {spec.n_groups} per-group arrays "
+            f"(one per dtype group), got {len(bufs)}")
+    return bufs
+
+
+def unpack(bufs: Union[jnp.ndarray, Sequence[jnp.ndarray]],
+           spec: GroupedPackSpec) -> PyTree:
+    """Inverse of ``pack``: per-group (n, P_pad_g) buffers -> delta tree
+    (leading axis n).  Restores per-leaf dtypes exactly (a mixed buffer
+    dtype -- e.g. the fused kernel's fp32 mixed output for a bf16 group
+    -- is cast back per leaf)."""
+    bufs = _as_group_tuple(bufs, spec, "unpack")
+    n = bufs[0].shape[0]
+    leaves = [None] * spec.n_leaves
+    for g, buf in zip(spec.groups, bufs):
+        for i, o, s, shp in zip(g.leaf_ids, g.offsets, g.sizes, g.shapes):
+            leaves[i] = buf[:, o:o + s].reshape((n,) + shp).astype(g.dtype)
     return jax.tree.unflatten(spec.treedef, leaves)
 
 
-def unpack_row(row: jnp.ndarray, spec: PackSpec) -> PyTree:
-    """Unpack a single packed row (P,) or (P_pad,) -- e.g. the fused
-    kernel's aggregate -- into a tree of per-leaf trailing shapes (no
-    client axis).  Keeps the row dtype (fp32 accumulator) untouched."""
-    leaves = [
-        row[o:o + s].reshape(shp)
-        for o, s, shp in zip(spec.offsets, spec.sizes, spec.shapes)
-    ]
+def unpack_row(rows: Union[jnp.ndarray, Sequence[jnp.ndarray]],
+               spec: GroupedPackSpec) -> PyTree:
+    """Unpack per-group aggregate rows -- each (P_g,) or (P_pad_g,), e.g.
+    the fused kernels' fp32 aggregates -- into a tree of per-leaf trailing
+    shapes (no client axis).  Keeps the row dtype (fp32 accumulator)
+    untouched."""
+    rows = _as_group_tuple(rows, spec, "unpack_row")
+    leaves = [None] * spec.n_leaves
+    for g, row in zip(spec.groups, rows):
+        for i, o, s, shp in zip(g.leaf_ids, g.offsets, g.sizes, g.shapes):
+            leaves[i] = row[o:o + s].reshape(shp)
     return jax.tree.unflatten(spec.treedef, leaves)
 
 
-def apply_aggregate_row(global_params: PyTree, row: jnp.ndarray,
-                        spec: PackSpec) -> PyTree:
-    """Eq.-4 epilogue shared by every one-pass backend: unpack the fp32
-    aggregate row and add it leaf-wise, casting back to each global-param
-    leaf's dtype only after the add."""
-    agg = unpack_row(row, spec)
+def apply_aggregate_row(global_params: PyTree,
+                        rows: Union[jnp.ndarray, Sequence[jnp.ndarray]],
+                        spec: GroupedPackSpec) -> PyTree:
+    """Eq.-4 epilogue shared by every one-pass backend: unpack the
+    per-group fp32 aggregate rows and add them leaf-wise, casting back to
+    each global-param leaf's dtype only after the add."""
+    agg = unpack_row(rows, spec)
     return jax.tree.map(lambda g, a: (g + a).astype(g.dtype),
                         global_params, agg)

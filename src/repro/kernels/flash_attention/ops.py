@@ -1,5 +1,7 @@
 """Jitted wrapper for the flash-attention kernel: layout, padding, backend
-dispatch.  Public signature matches the model stack's (B, S, H, hd) layout."""
+dispatch (compiled on TPU, interpret elsewhere -- see
+``repro.kernels.dispatch``).  Public signature matches the model stack's
+(B, S, H, hd) layout."""
 
 from __future__ import annotations
 
@@ -9,6 +11,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import resolve_interpret
 from .flash_attention import flash_attention_pallas
 from .ref import attention_ref
 
@@ -25,8 +28,9 @@ def _pad_to(x: int, m: int) -> int:
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, window: Optional[int] = None,
                     bq: int = 128, bk: int = 128,
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
     """q (B,S,Hq,hd), k/v (B,S,Hkv,hd) -> (B,S,Hq,hd)."""
+    interpret = resolve_interpret(interpret)
     B, S, Hq, hd = q.shape
     Sp = _pad_to(S, max(bq, bk))
 

@@ -37,8 +37,9 @@ Shape contract matches ``mixing.mix_pallas``: callers (``ops.py``) pad
 ``n`` to the float32 sublane multiple and ``p`` to a multiple of
 ``chunk``; ``w`` arrives padded to ``(_SUBLANE, n_pad)`` with the real
 weights in row 0.  Validated in interpret mode on CPU against the
-composed ``mix_ref`` + eq.-4 oracle (tests/test_fused_mixing.py);
-compiled TPU dispatch (``interpret=False``) is a ROADMAP open item.
+composed ``mix_ref`` + eq.-4 oracle (tests/test_fused_mixing.py); the
+wrappers in ``ops.py`` select compiled lowering (``interpret=False``)
+automatically on TPU (``repro.kernels.dispatch.default_interpret``).
 """
 
 from __future__ import annotations

@@ -1,5 +1,6 @@
 """Jitted wrappers for the graph-mixing kernels: shape padding, pytree
-plumbing, and backend dispatch (interpret on CPU, compiled on TPU).
+plumbing, and backend dispatch (compiled on TPU, interpret elsewhere --
+see ``default_interpret``).
 
 Entry points:
 
@@ -12,16 +13,30 @@ Entry points:
                                     ``sum_i tau_i (A X)_i = (tau^T A) X``
                                     (FedAvg ``A = I``, or rounds that do
                                     not need per-client mixed deltas).
+* ``mix_aggregate_grouped`` /    -- the same one-pass schedules over a
+  ``aggregate_grouped``             dtype-grouped packed tree
+                                    (``repro.fl.packing``): one fused
+                                    launch per dtype group, the padded
+                                    ``A`` and precombined weight row
+                                    shared across launches, per-group
+                                    fp32 aggregate rows returned for the
+                                    epilogue concatenation.
+
+Every ``interpret`` knob defaults to ``None`` = platform-resolved
+(``default_interpret()``: compiled on TPU, interpreter on CPU/GPU,
+``REPRO_PALLAS_INTERPRET`` env override) -- pass an explicit bool to pin
+a mode.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import default_interpret, resolve_interpret
 from .fused import aggregate_pallas, mix_aggregate_pallas
 from .mixing import mix_pallas
 from .ref import mix_ref
@@ -29,7 +44,8 @@ from .ref import mix_ref
 PyTree = Any
 
 __all__ = ["mix", "mix_pytree", "mix_aggregate", "aggregate",
-           "combine_weights"]
+           "mix_aggregate_grouped", "aggregate_grouped",
+           "combine_weights", "default_interpret"]
 
 _LANE = 128
 _SUBLANE = 8
@@ -72,22 +88,23 @@ def _weight_row(A, tau, m, n_pad):
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def mix(A: jnp.ndarray, X: jnp.ndarray, *, chunk: int = 2048,
-        interpret: bool = True) -> jnp.ndarray:
+        interpret: Optional[bool] = None) -> jnp.ndarray:
     """Delta = A @ X for arbitrary (n, p); pads to TPU tile alignment,
     runs the Pallas kernel, and slices back."""
+    interpret = resolve_interpret(interpret)
     A_p, X_p, n, p = _pad_inputs(A, X, chunk)
     out = mix_pallas(A_p, X_p, chunk=chunk, interpret=interpret)
     return out[:n, :p]
 
 
 def mix_pytree(A: jnp.ndarray, deltas: PyTree, *, chunk: int = 2048,
-               interpret: bool = True) -> PyTree:
+               interpret: Optional[bool] = None) -> PyTree:
     """Apply the mixing kernel to a pytree of per-client deltas (leaves with
     leading client axis n), flattening trailing dims per leaf.
 
     One kernel launch *per leaf*; the packed fused path
     (``repro.fl.packing`` + ``mix_aggregate``) replaces this loop with a
-    single launch per round."""
+    single launch per dtype group."""
     def one(d):
         flat = d.reshape(d.shape[0], -1)
         return mix(A, flat, chunk=chunk,
@@ -99,7 +116,7 @@ def mix_pytree(A: jnp.ndarray, deltas: PyTree, *, chunk: int = 2048,
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def mix_aggregate(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
                   X: jnp.ndarray, *, chunk: int = 2048,
-                  interpret: bool = True
+                  interpret: Optional[bool] = None
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused eq. 3 + eq. 4 over an arbitrary (n, p) payload.
 
@@ -107,6 +124,7 @@ def mix_aggregate(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
     aggregate row agg (p,) = ``(1/m) sum_i tau_i (A @ X)_i``, computed
     from one streaming pass over ``X``.
     """
+    interpret = resolve_interpret(interpret)
     A_p, X_p, n, p = _pad_inputs(A, X, chunk)
     w_p = _weight_row(A, tau, m, A_p.shape[0])
     mixed, agg = mix_aggregate_pallas(A_p, w_p, X_p, chunk=chunk,
@@ -117,11 +135,45 @@ def mix_aggregate(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def aggregate(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
               X: jnp.ndarray, *, chunk: int = 2048,
-              interpret: bool = True) -> jnp.ndarray:
+              interpret: Optional[bool] = None) -> jnp.ndarray:
     """Aggregate-only fast path: the float32 row
     ``(1/m) sum_i tau_i (A @ X)_i = ((tau^T A) / m) @ X`` (p,), reading
     ``X`` once and never materializing the mixed deltas."""
+    interpret = resolve_interpret(interpret)
     A_p, X_p, n, p = _pad_inputs(A, X, chunk)
     w_p = _weight_row(A, tau, m, A_p.shape[0])
     agg = aggregate_pallas(w_p, X_p, chunk=chunk, interpret=interpret)
     return agg[0, :p]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mix_aggregate_grouped(A: jnp.ndarray, tau: jnp.ndarray,
+                          m: jnp.ndarray,
+                          bufs: Tuple[jnp.ndarray, ...], *,
+                          chunk: int = 2048,
+                          interpret: Optional[bool] = None
+                          ) -> Tuple[Tuple[jnp.ndarray, ...],
+                                     Tuple[jnp.ndarray, ...]]:
+    """Fused eq. 3 + eq. 4 over a dtype-grouped packed tree: one fused
+    kernel launch per group buffer, each streamed at its native dtype.
+
+    ``bufs`` is ``repro.fl.packing.pack``'s output (per-group (n, P_g)
+    buffers).  Returns ``(mixed_bufs, agg_rows)``: per-group mixed
+    buffers in the group dtypes and per-group fp32 aggregate rows, ready
+    for ``packing.unpack`` / ``packing.apply_aggregate_row``.
+    """
+    out = [mix_aggregate(A, tau, m, b, chunk=chunk, interpret=interpret)
+           for b in bufs]
+    return tuple(mb for mb, _ in out), tuple(r for _, r in out)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def aggregate_grouped(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
+                      bufs: Tuple[jnp.ndarray, ...], *, chunk: int = 2048,
+                      interpret: Optional[bool] = None
+                      ) -> Tuple[jnp.ndarray, ...]:
+    """Aggregate-only variant of ``mix_aggregate_grouped``: per-group
+    fp32 rows ``((tau^T A) / m) @ X_g``, one launch per dtype group, the
+    mixed deltas never materialized."""
+    return tuple(aggregate(A, tau, m, b, chunk=chunk, interpret=interpret)
+                 for b in bufs)

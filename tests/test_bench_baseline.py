@@ -1,0 +1,61 @@
+"""The CI payload-bytes gate (``benchmarks.run.check_baseline``): every
+pinned baseline row/field must be matched by the fresh results, byte
+increases fail, and equal-or-smaller bytes pass."""
+
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.run import check_baseline  # noqa: E402
+
+
+KERNEL_ROW = dict(n=16, p=65536, dtype="bfloat16",
+                  bytes_fused=100, bytes_agg_only=60, us_fused_interp=1.0)
+GROUPED_ROW = dict(kind="grouped_payload", layout="bf16-majority-lm", n=16,
+                   bytes_grouped=50, us_agg_grouped_interp=2.0)
+
+
+@pytest.fixture
+def baseline(tmp_path):
+    path = tmp_path / "BENCH_mixing.json"
+    path.write_text(json.dumps(
+        {"mixing_kernel": [KERNEL_ROW, GROUPED_ROW]}))
+    return str(path)
+
+
+def test_identical_results_pass(baseline):
+    assert check_baseline([KERNEL_ROW, GROUPED_ROW], baseline) == []
+
+
+def test_smaller_bytes_pass_and_times_ignored(baseline):
+    better = dict(KERNEL_ROW, bytes_fused=90, us_fused_interp=999.0)
+    assert check_baseline([better, GROUPED_ROW], baseline) == []
+
+
+def test_byte_regression_fails(baseline):
+    worse = dict(GROUPED_ROW, bytes_grouped=51)
+    problems = check_baseline([KERNEL_ROW, worse], baseline)
+    assert len(problems) == 1 and "bytes_grouped" in problems[0]
+
+
+def test_dropped_pinned_row_fails(baseline):
+    problems = check_baseline([KERNEL_ROW], baseline)
+    assert problems and "no counterpart" in problems[0]
+
+
+def test_dropped_pinned_field_fails(baseline):
+    stripped = {k: v for k, v in KERNEL_ROW.items() if k != "bytes_fused"}
+    problems = check_baseline([stripped, GROUPED_ROW], baseline)
+    assert problems and "bytes_fused" in problems[0] \
+        and "missing" in problems[0]
+
+
+def test_empty_baseline_fails(tmp_path):
+    path = tmp_path / "empty.json"
+    path.write_text(json.dumps({"mixing_kernel": []}))
+    problems = check_baseline([KERNEL_ROW], str(path))
+    assert problems and "baseline stale" in problems[0]

@@ -122,14 +122,32 @@ def test_pack_unpack_round_trip():
     rng = np.random.default_rng(6)
     tree = _tree(rng, 11)
     spec = packing.pack_spec(tree)
-    buf = packing.pack(tree, spec)
+    assert spec.n_groups == 1            # dtype-homogeneous: one buffer
+    buf, = packing.pack(tree, spec)
     assert buf.shape == (11, spec.padded)
     assert spec.padded % 128 == 0 and spec.padded >= spec.total
-    back = packing.unpack(buf, spec)
+    back = packing.unpack((buf,), spec)
     for k in tree:
         assert back[k].dtype == tree[k].dtype
         np.testing.assert_array_equal(np.asarray(back[k]),
                                       np.asarray(tree[k]))
+
+
+def test_pack_single_dtype_bit_identical_to_one_buffer_layout():
+    """A dtype-homogeneous tree must degenerate to the pre-grouping
+    layout exactly: leaves concatenated in treedef order at their own
+    dtype, zero-padded to the lane multiple."""
+    rng = np.random.default_rng(60)
+    n = 5
+    tree = _tree(rng, n)
+    spec = packing.pack_spec(tree)
+    buf, = packing.pack(tree, spec)
+    leaves = jax.tree.leaves(tree)
+    legacy = np.concatenate(
+        [np.asarray(l).reshape(n, -1) for l in leaves]
+        + [np.zeros((n, spec.groups[0].pad), np.float32)], axis=1)
+    assert buf.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(buf), legacy)
 
 
 def test_pack_spec_is_cached_and_row_unpack_matches():
@@ -168,8 +186,8 @@ def test_packed_mix_equals_leafwise_mix():
     A = jnp.asarray(rng.random((n, n)), jnp.float32)
     tree = _tree(rng, n)
     spec = packing.pack_spec(tree)
-    mixed_buf = mix_ref(A, packing.pack(tree, spec))
-    got = packing.unpack(mixed_buf, spec)
+    buf, = packing.pack(tree, spec)
+    got = packing.unpack(mix_ref(A, buf), spec)
     want = mix_deltas(A, tree)
     for k in tree:
         np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
@@ -376,43 +394,188 @@ def test_server_aggregate_scan_rounds_compose():
 
 
 # ---------------------------------------------------------------------------
-# packed-buffer payload bytes + shard-aligned padding
+# per-dtype buffer groups: payload bytes, round trips, kernel parity
 # ---------------------------------------------------------------------------
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="per-dtype buffer groups are a ROADMAP open item: mixed-dtype "
-           "trees pack at jnp.result_type of the leaves, so one fp32 leaf "
-           "promotes a bf16-majority payload to fp32")
-def test_pack_mixed_dtype_does_not_promote_payload_bytes():
-    rng = np.random.default_rng(14)
-    n = 4
+def _mixed_tree(rng, n):
+    """bf16-majority LM-style tree with a small fp32 tail."""
     tree = {f"bf16_{i}": jnp.asarray(rng.standard_normal((n, 1000)),
                                      jnp.bfloat16) for i in range(3)}
     tree["fp32_bias"] = jnp.asarray(rng.standard_normal((n, 16)),
                                     jnp.float32)
+    return tree
+
+
+def test_pack_mixed_dtype_does_not_promote_payload_bytes():
+    """Regression pin (former ROADMAP xfail): per-dtype groups keep a
+    bf16-majority payload at bf16 width -- total packed bytes stay near
+    the ideal byte count and under 0.6x what the promoted-fp32 one-buffer
+    layout would ship."""
+    rng = np.random.default_rng(14)
+    n = 4
+    tree = _mixed_tree(rng, n)
     spec = packing.pack_spec(tree)
-    buf = packing.pack(tree, spec)
+    bufs = packing.pack(tree, spec)
+    nbytes = sum(b.nbytes for b in bufs)
+    assert nbytes == spec.nbytes(n)
     ideal = sum(np.prod(l.shape) * l.dtype.itemsize
                 for l in jax.tree.leaves(tree))
-    # generous padding allowance; fp32 promotion blows straight past it
-    assert buf.nbytes <= 1.25 * ideal
+    assert nbytes <= 1.25 * ideal
+    # the promoted layout packs every leaf at result_type (fp32) width
+    assert packing.promoted_nbytes(spec, n) == n * 3072 * 4
+    assert nbytes < 0.6 * packing.promoted_nbytes(spec, n)
+
+
+def test_pack_mixed_dtype_groups_layout():
+    """Leaves partition by dtype in first-seen treedef order; each group
+    is lane-aligned at its own width."""
+    rng = np.random.default_rng(140)
+    tree = _mixed_tree(rng, 4)
+    spec = packing.pack_spec(tree)
+    assert spec.n_groups == 2
+    g_bf16, g_fp32 = spec.groups
+    assert g_bf16.dtype == jnp.bfloat16 and g_fp32.dtype == jnp.float32
+    assert g_bf16.leaf_ids == (0, 1, 2) and g_fp32.leaf_ids == (3,)
+    for g in spec.groups:
+        assert g.padded % 128 == 0 and g.padded >= g.total
+    bufs = packing.pack(tree, spec)
+    assert [b.dtype for b in bufs] == [jnp.bfloat16, jnp.float32]
 
 
 def test_pack_mixed_dtype_round_trip_stays_exact():
-    """Whatever the packed dtype, unpack must restore per-leaf dtypes and
-    values exactly (bf16 -> fp32 -> bf16 is lossless)."""
+    """Per-dtype groups: unpack must restore per-leaf dtypes and values
+    exactly, with no cross-dtype casting anywhere."""
     rng = np.random.default_rng(15)
     n = 3
     tree = {"a": jnp.asarray(rng.standard_normal((n, 40)), jnp.bfloat16),
             "b": jnp.asarray(rng.standard_normal((n, 7)), jnp.float32)}
     spec = packing.pack_spec(tree)
-    assert spec.dtype == jnp.float32          # promoted (ROADMAP)
+    assert spec.n_groups == 2                 # no result_type promotion
     back = packing.unpack(packing.pack(tree, spec), spec)
     for k in tree:
         assert back[k].dtype == tree[k].dtype
         np.testing.assert_array_equal(np.asarray(back[k], np.float32),
                                       np.asarray(tree[k], np.float32))
+
+
+@given(st.integers(1, 5), st.integers(0, 5), st.integers(1, 6),
+       st.integers(1, 8), st.integers(0, 2**31))
+@settings(max_examples=25, deadline=None)
+def test_pack_grouped_round_trip_property(n_bf16, n_fp32, n, shards, seed):
+    """Grouped round trip over random interleaved mixed-dtype trees,
+    including fused_rs-style shard-aligned padding per group."""
+    rng = np.random.default_rng(seed)
+    leaves = [(jnp.bfloat16 if i < n_bf16 else jnp.float32,
+               int(rng.integers(1, 300))) for i in range(n_bf16 + n_fp32)]
+    rng.shuffle(leaves)
+    tree = [jnp.asarray(rng.standard_normal((n, s)), dt)
+            for dt, s in leaves]
+    spec = packing.pack_spec(tree, shards=shards)
+    for g in spec.groups:
+        assert g.padded % (128 * shards) == 0
+        assert (g.padded // shards) % 128 == 0
+    bufs = packing.pack(tree, spec)
+    assert len(bufs) == spec.n_groups
+    back = packing.unpack(bufs, spec)
+    for a, b in zip(tree, back):
+        assert b.dtype == a.dtype
+        np.testing.assert_array_equal(np.asarray(b, np.float32),
+                                      np.asarray(a, np.float32))
+    # per-group aggregate rows (fp32, padded width) unpack exactly too
+    rows = tuple(jnp.arange(g.padded, dtype=jnp.float32)
+                 for g in spec.groups)
+    agg_leaves = jax.tree.leaves(packing.unpack_row(rows, spec))
+    for g, row in zip(spec.groups, rows):
+        for i, o, s in zip(g.leaf_ids, g.offsets, g.sizes):
+            np.testing.assert_array_equal(
+                np.asarray(agg_leaves[i]).ravel(),
+                np.asarray(row)[o:o + s])
+
+
+def test_grouped_kernel_launch_matches_leafwise_oracle():
+    """One fused launch per dtype group == leaf-wise eq. 3 + eq. 4."""
+    from repro.kernels.mixing.ops import (aggregate_grouped,
+                                          mix_aggregate_grouped)
+
+    rng = np.random.default_rng(141)
+    n = 6
+    tree = _mixed_tree(rng, n)
+    A = jnp.asarray(rng.random((n, n)), jnp.float32)
+    tau = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+    m = jnp.float32(max(1.0, float(tau.sum())))
+    spec = packing.pack_spec(tree)
+    bufs = packing.pack(tree, spec)
+
+    mixed_bufs, rows = mix_aggregate_grouped(A, tau, m, bufs, chunk=256)
+    assert [b.dtype for b in mixed_bufs] == [b.dtype for b in bufs]
+    assert all(r.dtype == jnp.float32 for r in rows)
+    mixed = packing.unpack(mixed_bufs, spec)
+    want_mixed = mix_deltas(A, tree)
+    agg = packing.unpack_row(rows, spec)
+    w = (np.asarray(tau, np.float32) @ np.asarray(A, np.float32)) / float(m)
+    for k in tree:
+        tol = 5e-2 if tree[k].dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(np.asarray(mixed[k], np.float32),
+                                   np.asarray(want_mixed[k], np.float32),
+                                   rtol=tol, atol=tol)
+        want_agg = w @ np.asarray(tree[k], np.float32)
+        np.testing.assert_allclose(np.asarray(agg[k]), want_agg,
+                                   rtol=tol, atol=tol)
+    # aggregate-only grouped variant: identical rows
+    rows2 = aggregate_grouped(A, tau, m, bufs, chunk=256)
+    for r1, r2 in zip(rows, rows2):
+        np.testing.assert_allclose(np.asarray(r1), np.asarray(r2),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_round_fn_fused_handles_mixed_dtype_params():
+    """End-to-end: a mixed bf16/fp32 param tree through the 'fused' and
+    'aggregate' backends matches the einsum oracle."""
+    def loss(params, batch):
+        b, = batch
+        return 0.5 * jnp.sum(
+            (params["x"].astype(jnp.float32) - b.mean(axis=0)) ** 2) \
+            + 0.5 * jnp.sum((params["y"] - 1.0) ** 2)
+
+    rng = np.random.default_rng(142)
+    n, p, T, B = 6, 8, 2, 2
+    batches = (jnp.asarray(rng.standard_normal((n, T, B, p)), jnp.float32),)
+    A = jnp.asarray(rng.random((n, n)), jnp.float32)
+    tau = jnp.asarray([1, 0, 1, 1, 0, 1], jnp.float32)
+    m = jnp.float32(4.0)
+    eta = jnp.float32(0.1)
+    params = {"x": jnp.zeros(p, jnp.bfloat16), "y": jnp.zeros(3)}
+
+    ref_p, _ = make_round_fn(loss)(params, batches, A, tau, m, eta)
+    for backend in ("fused", "aggregate"):
+        got_p, _ = make_round_fn(loss, mixing_backend=backend, chunk=256)(
+            params, batches, A, tau, m, eta)
+        for k in params:
+            assert got_p[k].dtype == params[k].dtype
+            np.testing.assert_allclose(np.asarray(got_p[k], np.float32),
+                                       np.asarray(ref_p[k], np.float32),
+                                       rtol=1e-2, atol=1e-2)
+
+
+def test_pack_rejects_mismatched_tree():
+    """pack() must refuse a tree that doesn't match the spec instead of
+    silently scrambling the layout."""
+    rng = np.random.default_rng(143)
+    tree = _tree(rng, 4)
+    spec = packing.pack_spec(tree)
+    with pytest.raises(ValueError, match="does not match the spec"):
+        packing.pack({"w": tree["w"]}, spec)          # missing leaves
+    swapped = {"w": tree["b"], "b": tree["w"], "scalarish":
+               tree["scalarish"]}
+    with pytest.raises(ValueError, match="trailing shape"):
+        packing.pack(swapped, spec)                   # right treedef,
+                                                      # wrong leaf shapes
+    retyped = {k: (v.astype(jnp.bfloat16) if k == "b" else v)
+               for k, v in tree.items()}
+    with pytest.raises(ValueError, match="dtype"):
+        packing.pack(retyped, spec)                   # wrong leaf dtype
+    with pytest.raises(ValueError, match="unpack"):
+        packing.unpack(packing.pack(tree, spec) * 2, spec)
 
 
 @pytest.mark.parametrize("shards", [1, 2, 4, 8])
@@ -422,7 +585,7 @@ def test_pack_shard_aligned_round_trip(shards):
     spec = packing.pack_spec(tree, shards=shards)
     assert spec.padded % (128 * shards) == 0
     assert (spec.padded // shards) % 128 == 0   # per-shard lane alignment
-    buf = packing.pack(tree, spec)
+    buf, = packing.pack(tree, spec)
     assert buf.shape == (6, spec.padded)
     back = packing.unpack(buf, spec)
     for k in tree:
