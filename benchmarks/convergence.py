@@ -49,7 +49,20 @@ def _sq_dist(a, b) -> float:
 
 
 def run(rounds: int = 40, n: int = 70, clusters: int = 7, T: int = 5,
-        phi_max: float = 0.06, seed: int = 0, quiet: bool = False):
+        phi_max: float = 0.06, seed: int = 0, quiet: bool = False,
+        plan_path: str = None):
+    """``plan_path``: optional serialized ``RoundPlan`` JSON -- the run
+    then replays that pinned trajectory (its round count wins over
+    ``rounds``) instead of sampling a fresh one, so the measured gaps
+    are exactly reproducible across machines and PRs."""
+    plan = None
+    if plan_path:
+        from repro.fl import RoundPlan
+        plan = RoundPlan.load(plan_path)
+        n, rounds = plan.n_clients, plan.n_rounds
+        if not quiet:
+            print(f"replaying pinned trajectory {plan_path} "
+                  f"({rounds} rounds, {n} clients)")
     rng = np.random.default_rng(seed)
     ds = make_classification(n_samples=3500, seed=seed)
     parts = label_sorted_partition(ds, n, shards_per_client=2, rng=rng)
@@ -76,7 +89,7 @@ def run(rounds: int = 40, n: int = 70, clusters: int = 7, T: int = 5,
         gaps.append(_sq_dist(p, x_star))
         return {"gap": gaps[-1]}
 
-    server.run(eval_fn=eval_fn)
+    server.run(eval_fn=eval_fn, plan=plan)
 
     gap0 = _sq_dist(params0, x_star)
     ts = np.arange(1, len(gaps) + 1)

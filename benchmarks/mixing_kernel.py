@@ -34,6 +34,14 @@ packed layout is MEASURED against the promoted one-buffer layout it
 replaced -- a bf16-majority tree ships ~0.5x the promoted bytes --
 and the numbers land in BENCH_mixing.json, where the CI baseline check
 pins them against regression.
+
+Plan overhead (``plan_overhead_rows``): host-side cost of the
+declarative trajectory object -- building a K-round
+``RoundPlan.connectivity_aware`` (Algorithm 1's rule, all topology
+sampling included) plus its JSON round-trip.  Establishes that planning
+is microseconds-per-round host work, never on the device critical path,
+and sizes the pinned-trajectory artifacts ``benchmarks.run --plan``
+replays.
 """
 
 from __future__ import annotations
@@ -50,7 +58,7 @@ from repro.kernels.mixing.ops import (aggregate, aggregate_grouped, mix,
 from repro.kernels.mixing.ref import mix_ref
 
 __all__ = ["run", "traffic_model", "mesh_traffic_model",
-           "grouped_payload_rows"]
+           "grouped_payload_rows", "plan_overhead_rows"]
 
 # launch count for the per-leaf psum schedule in the reported model: a
 # representative LM delta-tree leaf count (the packed fused_rs schedule
@@ -161,6 +169,45 @@ def grouped_payload_rows(quiet: bool = False):
     return rows
 
 
+def plan_overhead_rows(quiet: bool = False):
+    """Host-side RoundPlan cost: build (Algorithm 1 planning incl. all
+    topology/sampling draws), ``to_json``, and ``from_json`` wall time,
+    plus the serialized artifact size.  Pure host numpy -- no device
+    work -- so these are wall-clock rows, not baseline-gated fields."""
+    from repro.core.graphs import D2DNetwork
+    from repro.core.server import ServerConfig
+    from repro.fl.plan import RoundPlan
+
+    rows = []
+    for n, c, K in ((70, 7, 30),       # the paper's Sec. 6 scale
+                    (128, 8, 20)):
+        net = D2DNetwork(n=n, c=c, k_range=(6, 9), p_fail=0.1)
+        cfg = ServerConfig(t_max=K, phi_max=0.06, seed=0)
+
+        t0 = time.perf_counter()
+        plan = RoundPlan.connectivity_aware(net, cfg)
+        t_build = (time.perf_counter() - t0) * 1e6
+
+        t0 = time.perf_counter()
+        js = plan.to_json()
+        t_dump = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        back = RoundPlan.from_json(js)
+        t_load = (time.perf_counter() - t0) * 1e6
+        assert back.allclose(plan)
+
+        rows.append(dict(kind="plan_overhead", n=n, clusters=c, rounds=K,
+                         us_build=t_build, us_build_per_round=t_build / K,
+                         us_to_json=t_dump, us_from_json=t_load,
+                         plan_json_bytes=len(js)))
+        if not quiet:
+            print(f"plan n={n:4d} c={c} K={K:3d}  "
+                  f"build={t_build:9.1f}us ({t_build / K:7.1f}us/round)  "
+                  f"to_json={t_dump:9.1f}us  from_json={t_load:9.1f}us  "
+                  f"json={len(js) / 1e6:.2f}MB")
+    return rows
+
+
 def run(quiet: bool = False):
     rng = np.random.default_rng(0)
     rows = []
@@ -232,6 +279,9 @@ def run(quiet: bool = False):
         print("\nper-dtype grouped packing: measured payload bytes vs the "
               "promoted one-buffer layout")
     rows.extend(grouped_payload_rows(quiet=quiet))
+    if not quiet:
+        print("\nhost-side RoundPlan overhead (build + JSON round-trip)")
+    rows.extend(plan_overhead_rows(quiet=quiet))
     return rows
 
 

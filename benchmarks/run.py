@@ -7,7 +7,12 @@
   roofline_table  -- §Roofline terms from dry-run artifacts (if present)
 
 ``python -m benchmarks.run [--only NAME] [--fast] [--json-out PATH]
-[--check-baseline PATH]``
+[--check-baseline PATH] [--plan PATH]``
+
+``--plan PATH`` pins the trajectory: the convergence benchmark executes
+the serialized ``RoundPlan`` (``repro.fl.plan``) instead of sampling a
+fresh one, so benchmark trajectories are reproducible artifacts (write
+one with ``python -m repro.launch.train --plan-out``).
 
 Results are written to ``BENCH_mixing.json`` by default so the perf
 trajectory (fused vs two-pass mixing wall time + bytes-moved model +
@@ -44,6 +49,8 @@ def _row_key(row):
     """Stable identity of a mixing_kernel result row across runs."""
     if row.get("kind") == "grouped_payload":
         return ("grouped_payload", row.get("layout"), row.get("n"))
+    if row.get("kind") == "plan_overhead":
+        return ("plan_overhead", row.get("n"), row.get("rounds"))
     return ("kernel", row.get("n"), row.get("p"), row.get("dtype"))
 
 
@@ -102,6 +109,10 @@ def main(argv=None) -> int:
                     help="compare fresh mixing_kernel payload bytes "
                          "against this committed baseline JSON and exit "
                          "non-zero on regression (CI gate)")
+    ap.add_argument("--plan", default=None, metavar="PATH",
+                    help="serialized RoundPlan JSON: the convergence "
+                         "benchmark replays this pinned trajectory "
+                         "instead of sampling a fresh one")
     args = ap.parse_args(argv)
 
     results = {}
@@ -127,7 +138,8 @@ def main(argv=None) -> int:
             results[name] = (comm_cost.run("high", rounds=rounds)
                              + comm_cost.run("low", rounds=rounds))
         elif name == "convergence":
-            results[name] = convergence.run(rounds=10 if args.fast else 40)
+            results[name] = convergence.run(rounds=10 if args.fast else 40,
+                                            plan_path=args.plan)
         elif name == "mixing_kernel":
             results[name] = mixing_kernel.run()
         elif name == "roofline_table":

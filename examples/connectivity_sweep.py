@@ -17,7 +17,12 @@ from repro.core.graphs import D2DNetwork
 from repro.core.server import FederatedServer, ServerConfig
 from repro.data import (FederatedBatcher, label_sorted_partition,
                         make_classification)
+from repro.fl import ExecutionConfig
 from repro.models import cnn as cnn_lib
+
+# one runtime selection for every sweep point: packed one-pass mixing,
+# the whole trajectory compiled into a single scan dispatch
+EXECUTION = ExecutionConfig(backend="fused", scan=True)
 
 
 def main():
@@ -40,7 +45,7 @@ def main():
                              p_fail=0.1)
         cfg = ServerConfig(T=5, t_max=rounds, phi_max=phi_max)
         server = FederatedServer(network, loss_fn, params, batcher, cfg,
-                                 algorithm="semidec")
+                                 algorithm="semidec", execution=EXECUTION)
         h = server.run(eval_fn=eval_fn, eval_every=rounds - 1)
         mean_m = float(np.mean([r.m_actual for r in h.records]))
         print(f"{phi_max:8.2f} {mean_m:7.1f} {h.ledger.total_d2s:6d} "

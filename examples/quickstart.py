@@ -17,6 +17,7 @@ from repro.core.graphs import D2DNetwork
 from repro.core.server import FederatedServer, ServerConfig
 from repro.data import (FederatedBatcher, label_sorted_partition,
                         make_classification)
+from repro.fl import ExecutionConfig
 from repro.models import cnn as cnn_lib
 
 
@@ -36,10 +37,14 @@ def main():
     # 3. the time-varying D2D network: k-regular digraphs, 10% link failures
     network = D2DNetwork(n=n, c=clusters, k_range=(6, 9), p_fail=0.1)
 
-    # 4. Algorithm 1 with connectivity threshold phi_max
+    # 4. Algorithm 1 with connectivity threshold phi_max; one
+    #    ExecutionConfig picks the runtime (packed one-pass kernels, the
+    #    whole trajectory in a single scan dispatch)
     cfg = ServerConfig(T=5, t_max=rounds, phi_max=2.0)
     server = FederatedServer(network, loss_fn, params, batcher, cfg,
-                             algorithm="semidec")
+                             algorithm="semidec",
+                             execution=ExecutionConfig(backend="fused",
+                                                       scan=True))
 
     xs, ys = jnp.asarray(ds.x), jnp.asarray(ds.y)
 
@@ -56,6 +61,13 @@ def main():
           f"{history.ledger.total_cost:.1f}")
     print("note how m(t) tracks the sampled topology: denser clusters ->"
           " smaller m -> fewer expensive uplinks.")
+
+    # the executed trajectory is a pinned artifact: save it and re-run it
+    # verbatim later (server.run(plan=RoundPlan.load(path)))
+    plan_json = server.last_plan.to_json()
+    print(f"\nreproducible trajectory: {len(plan_json)} bytes of JSON "
+          f"({server.last_plan.n_rounds} rounds x "
+          f"{server.last_plan.n_clients} clients)")
 
 
 if __name__ == "__main__":

@@ -39,8 +39,17 @@ backends (``make_round_fn(..., mixing_backend=...)``):
               automatically when nothing records per-client mixed deltas.
 
 ``make_scanned_rounds`` wraps the round in ``jax.lax.scan`` over stacked
-``(A_t, tau_t, m_t, eta_t)`` sequences so a K-round trajectory dispatches
-to the device once instead of once per round.
+``(A_t, tau_t, m_t, eta_t[, active_t])`` sequences so a K-round
+trajectory dispatches to the device once instead of once per round.
+
+Straggler masks: every round function takes an optional ``active`` (n,)
+0/1 mask (the ``RoundPlan`` ``active_t`` column).  A dropped client
+contributes zero delta to its D2D neighbors and never uploads; the eq.-4
+divisor ``m`` must then be the effective sampled-and-active count (the
+plan renormalizes it).  The kernel backends fold the mask into the
+``(tau^T A)/m`` combine row (``kernels.mixing.ops.combine_weights``) so
+the aggregate-only path pays nothing for it; an all-ones mask is
+bitwise-identical to ``active=None``.
 
 The multi-device shard_map implementation with the same semantics lives in
 ``repro.fl.distributed``; this reference version doubles as its oracle.
@@ -60,6 +69,7 @@ __all__ = [
     "mix_deltas",
     "global_update",
     "fused_mix_update",
+    "mask_clients",
     "make_round_fn",
     "make_scanned_rounds",
     "MIXING_BACKENDS",
@@ -98,6 +108,18 @@ def client_deltas(loss_fn: LossFn, global_params: PyTree,
     run = functools.partial(local_sgd, loss_fn)
     finals = jax.vmap(lambda b: run(global_params, b, eta))(client_batches)
     return jax.tree.map(lambda f, g: f - g[None], finals, global_params)
+
+
+def mask_clients(tree: PyTree, active: jnp.ndarray) -> PyTree:
+    """Zero dropped clients' rows: each leaf has leading client axis n and
+    is multiplied by the (n,) 0/1 ``active`` mask (broadcast over trailing
+    dims, cast to the leaf dtype so nothing promotes).  An all-ones mask
+    is a bitwise no-op (IEEE ``x * 1.0 == x``)."""
+    def one(d):
+        shape = (active.shape[0],) + (1,) * (d.ndim - 1)
+        return d * active.astype(d.dtype).reshape(shape)
+
+    return jax.tree.map(one, tree)
 
 
 def mix_deltas(A: jnp.ndarray, deltas: PyTree) -> PyTree:
@@ -139,14 +161,17 @@ def global_update(global_params: PyTree, mixed: PyTree, tau: jnp.ndarray,
 
 def fused_mix_update(global_params: PyTree, deltas: PyTree, A: jnp.ndarray,
                      tau: jnp.ndarray, m: jnp.ndarray, *, chunk: int = 2048,
-                     interpret: Optional[bool] = None
+                     interpret: Optional[bool] = None,
+                     active: Optional[jnp.ndarray] = None
                      ) -> Tuple[PyTree, PyTree]:
     """One-pass eq. 3 + eq. 4 over the packed delta buffers.
 
     Packs the delta pytree into per-dtype (n, P_pad_g) buffers, launches
     the fused Pallas kernel once per dtype group (streaming each group's
     payload through VMEM a single time at its native dtype), and returns
-    ``(new_global_params, mixed_deltas)``.
+    ``(new_global_params, mixed_deltas)``.  With a straggler mask the
+    packed buffers are masked before the launch so the *mixed* output
+    also reflects the drop (one multiply per group buffer).
     """
     # deferred: repro.fl lazily imports back into repro.core at package init
     from repro.fl import packing
@@ -154,34 +179,45 @@ def fused_mix_update(global_params: PyTree, deltas: PyTree, A: jnp.ndarray,
 
     spec = packing.pack_spec(deltas)
     bufs = packing.pack(deltas, spec)
+    if active is not None:
+        bufs = tuple(mask_clients(list(bufs), active))
     mixed_bufs, agg_rows = mix_aggregate_grouped(A, tau, m, bufs,
                                                  chunk=chunk,
-                                                 interpret=interpret)
+                                                 interpret=interpret,
+                                                 active=active)
     mixed = packing.unpack(mixed_bufs, spec)
     new_global = packing.apply_aggregate_row(global_params, agg_rows, spec)
     return new_global, mixed
 
 
 def _mix_and_update(global_params, deltas, A, tau, m, *, mixing_backend,
-                    chunk, interpret):
-    if mixing_backend == "einsum":
-        mixed = mix_deltas(A, deltas)
-        return global_update(global_params, mixed, tau, m), mixed
-    if mixing_backend == "pallas":
-        from repro.kernels.mixing.ops import mix_pytree
-        mixed = mix_pytree(A, deltas, chunk=chunk, interpret=interpret)
+                    chunk, interpret, active=None):
+    if mixing_backend in ("einsum", "pallas"):
+        # materializing backends: a dropped client's delta is zeroed
+        # before eq. 3 and its upload removed from the eq.-4 sum.
+        if active is not None:
+            deltas = mask_clients(deltas, active)
+            tau = tau * active
+        if mixing_backend == "einsum":
+            mixed = mix_deltas(A, deltas)
+        else:
+            from repro.kernels.mixing.ops import mix_pytree
+            mixed = mix_pytree(A, deltas, chunk=chunk, interpret=interpret)
         return global_update(global_params, mixed, tau, m), mixed
     if mixing_backend == "fused":
         return fused_mix_update(global_params, deltas, A, tau, m,
-                                chunk=chunk, interpret=interpret)
+                                chunk=chunk, interpret=interpret,
+                                active=active)
     if mixing_backend == "aggregate":
         from repro.fl import packing
         from repro.kernels.mixing.ops import aggregate_grouped
 
+        # one-pass path: the mask folds into the combine row
+        # (combine_weights) -- the payload itself is never touched.
         spec = packing.pack_spec(deltas)
         bufs = packing.pack(deltas, spec)
         agg_rows = aggregate_grouped(A, tau, m, bufs, chunk=chunk,
-                                     interpret=interpret)
+                                     interpret=interpret, active=active)
         return packing.apply_aggregate_row(global_params, agg_rows,
                                            spec), None
     raise ValueError(
@@ -194,10 +230,13 @@ def make_round_fn(loss_fn: LossFn, jit: bool = True,
                   interpret: Optional[bool] = None):
     """Build the jitted global-round function.
 
-    Signature: ``round_fn(global_params, client_batches, A, tau, m, eta)``
+    Signature: ``round_fn(global_params, client_batches, A, tau, m, eta[,
+    active])``
       - client_batches leaves: (n, T, ...) -- T local minibatches per client
       - A: (n, n) runtime equal-neighbor matrix
       - tau: (n,) 0/1 sampling indicators; m = tau.sum() (passed explicitly)
+      - active: optional (n,) 0/1 straggler mask; ``m`` must then be the
+        effective sampled-and-active count (module docstring)
     Returns ``(new_global_params, mixed_deltas)`` -- the mixed deltas are
     exposed for testing and communication accounting, except under the
     'aggregate' backend, which never materializes them and returns ``None``
@@ -216,11 +255,13 @@ def make_round_fn(loss_fn: LossFn, jit: bool = True,
 
     def round_fn(global_params: PyTree, client_batches: PyTree,
                  A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
-                 eta: jnp.ndarray) -> Tuple[PyTree, PyTree]:
+                 eta: jnp.ndarray,
+                 active: Optional[jnp.ndarray] = None
+                 ) -> Tuple[PyTree, PyTree]:
         deltas = client_deltas(loss_fn, global_params, client_batches, eta)
         return _mix_and_update(global_params, deltas, A, tau, m,
                                mixing_backend=mixing_backend, chunk=chunk,
-                               interpret=interpret)
+                               interpret=interpret, active=active)
 
     return jax.jit(round_fn) if jit else round_fn
 
@@ -235,10 +276,12 @@ def make_scanned_rounds(loss_fn: LossFn, K: int, jit: bool = True,
     dispatches to the device once per K rounds instead of once per round:
 
     ``scanned(global_params, client_batches_seq, A_seq, tau_seq, m_seq,
-    eta_seq) -> (final_params, params_seq)``
+    eta_seq[, active_seq]) -> (final_params, params_seq)``
 
       - client_batches_seq leaves: (K, n, T, ...) -- stacked round batches
       - A_seq (K, n, n), tau_seq (K, n), m_seq (K,), eta_seq (K,)
+      - active_seq: optional (K, n) stacked straggler masks (the
+        ``RoundPlan`` ``active_t`` column)
       - params_seq leaves: (K, ...) -- the global params after each round
         (params_seq[K-1] == final_params), so per-round evaluation and
         ``History`` bookkeeping stay exact.
@@ -253,14 +296,19 @@ def make_scanned_rounds(loss_fn: LossFn, K: int, jit: bool = True,
 
     def scanned(global_params: PyTree, client_batches_seq: PyTree,
                 A_seq: jnp.ndarray, tau_seq: jnp.ndarray,
-                m_seq: jnp.ndarray, eta_seq: jnp.ndarray
+                m_seq: jnp.ndarray, eta_seq: jnp.ndarray,
+                active_seq: Optional[jnp.ndarray] = None
                 ) -> Tuple[PyTree, PyTree]:
         def body(params, xs):
-            batches, A, tau, m, eta = xs
-            new_params, _ = round_fn(params, batches, A, tau, m, eta)
+            batches, A, tau, m, eta = xs[:5]
+            active = xs[5] if active_seq is not None else None
+            new_params, _ = round_fn(params, batches, A, tau, m, eta,
+                                     active)
             return new_params, new_params
 
         xs = (client_batches_seq, A_seq, tau_seq, m_seq, eta_seq)
+        if active_seq is not None:
+            xs = xs + (active_seq,)
         final, params_seq = jax.lax.scan(body, global_params, xs, length=K)
         return final, params_seq
 

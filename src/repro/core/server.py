@@ -1,59 +1,49 @@
-"""Parameter-server orchestration: Algorithm 1 and the paper's baselines.
+"""Parameter-server orchestration: plan -> engine -> History.
 
-The server is host-side control logic around the jitted round function of
-``repro.core.rounds``:
+The server is a thin host-side driver around two first-class objects:
 
-* ``semidec`` -- Algorithm 1: D2D mixing with the time-varying
-  equal-neighbor matrix + the connectivity-aware ``m(t)`` rule (7).
-* ``fedavg``  -- McMahan et al.: no D2D (A = I), fixed ``m``.
-* ``colrel``  -- Yemini et al.: one column-stochastic D2D aggregation per
-  round, fixed ``m`` (no connectivity-aware tuning).
+* ``repro.fl.plan.RoundPlan`` -- the full time-varying trajectory
+  ``(A_t, tau_t, m_t, eta_t, active_t)`` as stacked host arrays, built by
+  the algorithm constructors (``connectivity_aware`` = Algorithm 1 with
+  the eq.-7 m(t) rule, ``fedavg`` = A I / fixed m, ``colrel``) and
+  serializable to JSON for reproducible runs.
+* ``repro.fl.engine.Engine`` -- the compiled runtime that executes a
+  plan: ``LocalEngine`` (single-host ``core.rounds``) or ``MeshEngine``
+  (``fl.distributed``), selected by one ``ExecutionConfig(backend=,
+  scan=, record_mixed=, chunk=, interpret=, mesh=, model_cfg=)``.  The
+  backend-selection matrix lives in ``repro.fl.engine.resolve_backend``
+  and nowhere else.
 
-All three share the same compiled round; they differ only in the runtime
-``A``/``tau``/``m`` fed to it -- which is exactly the paper's framing.
+``run()`` is therefore just::
 
-Two performance knobs thread through to ``repro.core.rounds``:
+    plan  = rows from repro.fl.plan.plan_rows (interleaved with batch
+            draws on the server rng, preserving legacy trajectories
+            bitwise) -- or a caller-provided plan (``run(plan=...)``,
+            e.g. one loaded from JSON)
+    self.params, history = engine.execute(plan, params, batches, ...)
 
-* ``mixing_backend`` ('einsum' | 'pallas' | 'fused') selects the eq. 3+4
-  implementation -- 'fused' packs the delta pytree into per-dtype flat
-  buffers and streams each through the fused Pallas kernel once per
-  round (``chunk``/``interpret`` tune the kernels; ``interpret=None``
-  resolves per platform, compiled on TPU).  Because
-  ``History`` never records per-client mixed deltas, the kernel backends
-  are upgraded to the aggregate-only fast path ('aggregate',
-  ``kernels.mixing.ops.aggregate``: ~3x less payload traffic) unless the
-  caller opts back in with ``record_mixed=True``.
-* ``scan_rounds=True`` plans all ``t_max`` rounds up front (topology
-  sampling and batch draws are host-side and param-independent) and runs
-  them in a single ``lax.scan`` dispatch via ``make_scanned_rounds``;
-  per-round params are emitted by the scan, so ``History`` records and
-  eval cadence are unchanged.
-* ``mesh=`` + ``model_cfg=`` swap the single-host round function for the
-  mesh runtime (``repro.fl.distributed``): each round dispatches
-  ``make_train_step`` (``mixing_backend`` then names a mesh mixing
-  schedule: 'ring' | 'gather' | 'einsum' | 'fused' | 'fused_rs'), and
-  ``scan_rounds=True`` composes with it via ``make_scanned_train_steps``
-  so the whole ``t_max``-round time-varying trajectory is ONE mesh
-  dispatch.  ``batch_sampler`` must then return the per-round token
-  array ``(n_clients, T, B_local, S+1)`` instead of a batch tree;
-  ``History`` semantics are unchanged.
+Straggler masks (``active_t``) are a plan column, not a runtime flag:
+``plan.with_dropout(rate)`` drops clients per round, the engines thread
+the mask through every mixing backend, and an all-ones mask is
+bitwise-identical to full participation.
+
+Legacy construction kwargs (``mixing_backend=``, ``scan_rounds=``,
+``record_mixed=``, ``mesh=``, ``model_cfg=``, ``chunk=``,
+``interpret=``) still work: they are translated to an ``ExecutionConfig``
+under a ``DeprecationWarning``.  Pass ``execution=ExecutionConfig(...)``
+instead.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence
+import warnings
+from typing import Any, Callable, Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from . import sampling
-from .adjacency import network_matrix
-from .bounds import exact_phi_ell, phi_ell_bound_from_stats
 from .graphs import D2DNetwork
-from .metrics import CommLedger, count_d2d_transmissions
-from .rounds import MIXING_BACKENDS, make_round_fn, make_scanned_rounds
+from .metrics import CommLedger
 
 __all__ = ["ServerConfig", "RoundRecord", "History", "FederatedServer"]
 
@@ -110,192 +100,122 @@ class History:
         return self.ledger.cumulative_cost()
 
 
+_LEGACY_KWARGS = ("mixing_backend", "scan_rounds", "record_mixed", "mesh",
+                  "model_cfg", "chunk", "interpret")
+
+
 class FederatedServer:
-    """Runs ``t_max`` global rounds of the chosen algorithm."""
+    """Runs ``t_max`` global rounds of the chosen algorithm.
+
+    ``execution`` (an ``repro.fl.engine.ExecutionConfig``) selects the
+    runtime; the legacy per-knob kwargs translate to it under a
+    ``DeprecationWarning``.  After ``run()``, ``self.last_plan`` holds
+    the executed ``RoundPlan`` (save it with ``last_plan.save(path)`` to
+    pin the trajectory).
+    """
 
     def __init__(self, network: D2DNetwork, loss_fn, init_params: PyTree,
                  batch_sampler: BatchSampler, config: ServerConfig,
-                 algorithm: str = "semidec", jit: bool = True,
-                 mixing_backend: str = "einsum", scan_rounds: bool = False,
-                 record_mixed: bool = False, mesh=None, model_cfg=None,
-                 chunk: int = 2048, interpret: Optional[bool] = None):
+                 algorithm: str = "semidec", jit: Optional[bool] = None,
+                 execution=None,
+                 mixing_backend: Optional[str] = None,
+                 scan_rounds: Optional[bool] = None,
+                 record_mixed: Optional[bool] = None,
+                 mesh=None, model_cfg=None,
+                 chunk: Optional[int] = None,
+                 interpret: Optional[bool] = None):
+        # deferred: repro.fl imports back into repro.core at package init
+        from repro.fl.engine import ExecutionConfig, make_engine
+
         if algorithm not in ALGORITHMS:
             raise ValueError(f"algorithm must be one of {ALGORITHMS}")
         if algorithm in ("fedavg", "colrel") and config.m_fixed is None:
             raise ValueError(f"{algorithm} requires config.m_fixed")
+
+        passed = dict(zip(_LEGACY_KWARGS,
+                          (mixing_backend, scan_rounds, record_mixed,
+                           mesh, model_cfg, chunk, interpret)))
+        legacy = {k: v for k, v in passed.items() if v is not None}
+        if execution is not None:
+            if legacy:
+                raise ValueError(
+                    "pass either execution=ExecutionConfig(...) or the "
+                    f"legacy kwargs {sorted(legacy)}, not both")
+            if jit is not None and jit != execution.jit:
+                raise ValueError(
+                    f"jit={jit} contradicts execution.jit="
+                    f"{execution.jit}; set jit on the ExecutionConfig")
+        else:
+            if legacy:
+                warnings.warn(
+                    f"FederatedServer kwargs {sorted(legacy)} are "
+                    "deprecated; pass execution=ExecutionConfig("
+                    "backend=, scan=, record_mixed=, chunk=, interpret=, "
+                    "mesh=, model_cfg=) instead",
+                    DeprecationWarning, stacklevel=2)
+            execution = ExecutionConfig(
+                backend=mixing_backend if mixing_backend is not None
+                else "einsum",
+                scan=bool(scan_rounds),
+                record_mixed=bool(record_mixed),
+                chunk=chunk if chunk is not None else 2048,
+                interpret=interpret,
+                jit=jit if jit is not None else True,
+                mesh=mesh, model_cfg=model_cfg)
+
         self.network = network
         self.config = config
         self.algorithm = algorithm
         self.params = init_params
         self.batch_sampler = batch_sampler
-        self.mixing_backend = mixing_backend
-        self.scan_rounds = scan_rounds
-        self._loss_fn = loss_fn
-        self._jit = jit
-        self._chunk = chunk
-        self._interpret = interpret
-        self.mesh = mesh
-        self.model_cfg = model_cfg
+        self.execution = execution
+        self.engine = make_engine(execution, loss_fn)
         self.rng = np.random.default_rng(config.seed)
-        self._m_next = (config.m_fixed if algorithm != "semidec"
-                        else (config.m0 or network.n))
-        if mesh is not None:
-            # mesh runtime: round dispatch goes through repro.fl.distributed
-            # (mixing_backend names a mesh mixing schedule).
-            from repro.fl.distributed import MIXINGS, make_train_step
-            if model_cfg is None:
-                raise ValueError("mesh runtime requires model_cfg")
-            if mixing_backend not in MIXINGS:
-                raise ValueError(
-                    f"mesh mixing must be one of {MIXINGS}")
-            if record_mixed:
-                raise ValueError(
-                    "record_mixed is not supported on the mesh runtime: "
-                    "the mesh train step never returns mixed deltas")
-            self.effective_backend = mixing_backend
-            self.round_fn = None
-            self._mesh_step = make_train_step(model_cfg, mesh,
-                                              mixing=mixing_backend,
-                                              jit=jit)
-            return
-        if mixing_backend not in MIXING_BACKENDS:
+        self.last_plan = None
+
+    @property
+    def effective_backend(self) -> str:
+        """The backend the engine actually dispatches (post
+        ``resolve_backend``, e.g. 'fused' upgraded to 'aggregate')."""
+        return self.engine.backend
+
+    # -- plan + batches (shared rng stream, legacy consumption order) ------
+
+    def _plan_and_batches(self, plan=None):
+        """Build (or adopt) the trajectory and draw the per-round batches.
+
+        When planning here, plan rows and batch draws interleave on
+        ``self.rng`` exactly like the legacy per-round loop, so
+        trajectories are bitwise-reproducible across the redesign."""
+        from repro.fl.plan import RoundPlan, plan_rows
+
+        cfg = self.config
+        if plan is None:
+            rows, batches = [], []
+            gen = plan_rows(self.network, cfg, self.algorithm, self.rng)
+            for t in range(cfg.t_max):
+                rows.append(next(gen))
+                batches.append(self.batch_sampler(self.rng, t))
+            return RoundPlan.from_rows(rows, self.algorithm), batches
+        if plan.n_clients != self.network.n:
             raise ValueError(
-                f"mixing_backend must be one of {MIXING_BACKENDS}")
-        if record_mixed and mixing_backend == "aggregate":
-            raise ValueError(
-                "record_mixed=True contradicts the 'aggregate' backend, "
-                "which never materializes mixed deltas")
-        # History never records per-client mixed deltas, so unless the
-        # caller explicitly wants round_fn to return them, the kernel
-        # backends dispatch kernels.mixing.ops.aggregate instead (the
-        # aggregate-only ROADMAP variant: same update, ~3x less traffic).
-        self.effective_backend = mixing_backend
-        if not record_mixed and mixing_backend in ("pallas", "fused"):
-            self.effective_backend = "aggregate"
-        self._mesh_step = None
-        self.round_fn = make_round_fn(loss_fn, jit=jit,
-                                      mixing_backend=self.effective_backend,
-                                      chunk=chunk, interpret=interpret)
+                f"plan is for {plan.n_clients} clients, network has "
+                f"{self.network.n}")
+        batches = [self.batch_sampler(self.rng, t)
+                   for t in range(plan.n_rounds)]
+        return plan, batches
 
-    # -- one global aggregation round -------------------------------------
+    def run(self, eval_fn: Optional[EvalFn] = None, eval_every: int = 1,
+            plan=None) -> History:
+        """build plan -> engine.execute(plan) -> History.
 
-    def _plan_round(self, t: int):
-        """Sample G(t), build A(t), and decide (m, tau) for this round."""
-        n = self.network.n
-        cfg = self.config
-        uses_d2d = self.algorithm in ("semidec", "colrel")
-
-        if uses_d2d:
-            clusters = self.network.sample(self.rng)
-            A = network_matrix(clusters, n)
-            d2d = sum(count_d2d_transmissions(c.W) for c in clusters)
-        else:
-            clusters = None
-            A = np.eye(n)
-            d2d = 0
-
-        psi_bound = float("nan")
-        m = self._m_next
-        if self.algorithm == "semidec":
-            # Alg. 1 line 11: the new graph's degree stats set m for the
-            # *next* sampling; for t=0 the input m(0) is used.
-            if cfg.bound_kind == "exact":
-                psis = [exact_phi_ell(c.W) for c in clusters]
-            else:
-                psis = [phi_ell_bound_from_stats(c.stats, cfg.bound_kind)
-                        for c in clusters]
-            sizes = [c.size for c in clusters]
-            self._m_next = sampling.min_clients(psis, sizes, n, cfg.phi_max)
-            if t > 0:
-                m = self._m_next
-            from .bounds import psi_total
-            psi_bound = psi_total(m, n, psis, sizes)
-
-        vertex_sets = ([c.vertices for c in clusters] if clusters is not None
-                       else self.network.partition)
-        tau, m_actual = sampling.sample_clients(self.rng, vertex_sets, m, n)
-        return A, tau, m, m_actual, d2d, psi_bound
-
-    def run(self, eval_fn: Optional[EvalFn] = None,
-            eval_every: int = 1) -> History:
-        if self.scan_rounds:
-            return self._run_scanned(eval_fn, eval_every)
-        cfg = self.config
-        history = History(algorithm=self.algorithm,
-                          ledger=CommLedger(energy_ratio=cfg.energy_ratio))
-        for t in range(cfg.t_max):
-            A, tau, m, m_actual, d2d, psi_bound = self._plan_round(t)
-            eta = float(cfg.eta(t))
-            batches = self.batch_sampler(self.rng, t)
-            args = (self.params, batches,
-                    jnp.asarray(A, dtype=jnp.float32),
-                    jnp.asarray(tau, dtype=jnp.float32),
-                    jnp.asarray(float(m_actual), dtype=jnp.float32),
-                    jnp.asarray(eta, dtype=jnp.float32))
-            if self.mesh is not None:
-                self.params = self._mesh_step(*args)
-            else:
-                self.params, _ = self.round_fn(*args)
-
-            rec = RoundRecord(t=t, m=m, m_actual=m_actual,
-                              psi_bound=psi_bound, d2s=m_actual, d2d=d2d,
-                              eta=eta)
-            if eval_fn is not None and (t % eval_every == 0
-                                        or t == cfg.t_max - 1):
-                rec.metrics = {k: float(v)
-                               for k, v in eval_fn(self.params).items()}
-            history.records.append(rec)
-            history.ledger.add_round(d2s=m_actual, d2d=d2d)
-        return history
-
-    def _run_scanned(self, eval_fn: Optional[EvalFn],
-                     eval_every: int) -> History:
-        """Single-dispatch variant: plan every round host-side (topology
-        sampling, m(t) adaptation, and batch draws are all
-        param-independent -- the rng consumption order matches ``run``),
-        stack the per-round inputs, and execute all ``t_max`` rounds in
-        one ``lax.scan``.  The scan emits the params after every round,
-        so ``History`` records and eval cadence are identical to the
-        sequential driver."""
-        cfg = self.config
-        history = History(algorithm=self.algorithm,
-                          ledger=CommLedger(energy_ratio=cfg.energy_ratio))
-        plans, batch_list = [], []
-        for t in range(cfg.t_max):
-            plan = self._plan_round(t)
-            plans.append(plan)
-            batch_list.append(self.batch_sampler(self.rng, t))
-
-        A_seq = jnp.stack([jnp.asarray(p[0], jnp.float32) for p in plans])
-        tau_seq = jnp.stack([jnp.asarray(p[1], jnp.float32) for p in plans])
-        m_seq = jnp.asarray([float(p[3]) for p in plans], jnp.float32)
-        eta_seq = jnp.asarray([float(cfg.eta(t)) for t in range(cfg.t_max)],
-                              jnp.float32)
-        batches_seq = jax.tree.map(lambda *bs: jnp.stack(bs), *batch_list)
-
-        if self.mesh is not None:
-            from repro.fl.distributed import make_scanned_train_steps
-            scanned = make_scanned_train_steps(self.model_cfg, self.mesh,
-                                               cfg.t_max,
-                                               mixing=self.mixing_backend,
-                                               jit=self._jit)
-        else:
-            scanned = make_scanned_rounds(
-                self._loss_fn, cfg.t_max, jit=self._jit,
-                mixing_backend=self.effective_backend,
-                chunk=self._chunk, interpret=self._interpret)
-        self.params, params_seq = scanned(self.params, batches_seq, A_seq,
-                                          tau_seq, m_seq, eta_seq)
-
-        for t, (_, _, m, m_actual, d2d, psi_bound) in enumerate(plans):
-            rec = RoundRecord(t=t, m=m, m_actual=m_actual,
-                              psi_bound=psi_bound, d2s=m_actual, d2d=d2d,
-                              eta=float(cfg.eta(t)))
-            if eval_fn is not None and (t % eval_every == 0
-                                        or t == cfg.t_max - 1):
-                params_t = jax.tree.map(lambda x: x[t], params_seq)
-                rec.metrics = {k: float(v)
-                               for k, v in eval_fn(params_t).items()}
-            history.records.append(rec)
-            history.ledger.add_round(d2s=m_actual, d2d=d2d)
+        ``plan``: an explicit ``RoundPlan`` to execute (e.g. loaded from
+        JSON, or a built plan transformed by ``with_dropout``); default
+        is to plan ``config.t_max`` rounds of ``self.algorithm`` here.
+        """
+        plan, batches = self._plan_and_batches(plan)
+        self.params, history = self.engine.execute(
+            plan, self.params, batches, eval_fn=eval_fn,
+            eval_every=eval_every, energy_ratio=self.config.energy_ratio)
+        self.last_plan = plan
         return history

@@ -1,15 +1,23 @@
 """Distributed (mesh) implementation of the paper's semi-decentralized FL
-round and the sharded inference steps.  ``repro.core.rounds`` is the
-single-host oracle with identical semantics."""
+round, the sharded inference steps, and the declarative plan/engine API:
+``RoundPlan`` (the whole time-varying trajectory as one serializable host
+object) executed by an ``Engine`` selected via ``ExecutionConfig``.
+``repro.core.rounds`` is the single-host oracle with identical semantics.
+"""
 
 from .distributed import (MIXINGS, make_train_step,
                           make_scanned_train_steps, make_prefill_step,
                           make_decode_step, build_topology_inputs)
+from .engine import (Engine, ExecutionConfig, LocalEngine, MeshEngine,
+                     make_engine, resolve_backend)
 from .packing import (GroupSpec, GroupedPackSpec, apply_aggregate_row,
                       pack, pack_spec, unpack, unpack_row)
+from .plan import PlanRow, RoundPlan, plan_rows
 
 __all__ = ["MIXINGS", "make_train_step", "make_scanned_train_steps",
            "make_prefill_step", "make_decode_step",
            "build_topology_inputs", "GroupSpec", "GroupedPackSpec",
            "pack", "pack_spec", "unpack", "unpack_row",
-           "apply_aggregate_row"]
+           "apply_aggregate_row", "Engine", "ExecutionConfig",
+           "LocalEngine", "MeshEngine", "make_engine", "resolve_backend",
+           "PlanRow", "RoundPlan", "plan_rows"]

@@ -59,10 +59,17 @@ Backend-selection matrix (mixing x runtime x scan)::
     ``jax.experimental.shard_map`` (jax 0.4.x) -- see ``_shard_map``.
 
 Scan: ``make_scanned_train_steps(cfg, mesh, K, ...)`` lifts the stacked
-``(A_t, tau_t, m_t, eta_t)`` ``lax.scan`` of ``core.rounds
+``(A_t, tau_t, m_t, eta_t[, active_t])`` ``lax.scan`` of ``core.rounds
 .make_scanned_rounds`` into the mesh runtime, so a K-round time-varying
 topology trajectory compiles and dispatches ONCE for every mixing
 schedule above (single-host oracle: ``repro.core.rounds``).
+
+Drivers normally do not call these factories directly: a ``RoundPlan``
+(``repro.fl.plan``) holds the trajectory and ``ExecutionConfig(mesh=,
+model_cfg=, backend=<schedule above>, scan=)`` selects this runtime via
+``repro.fl.engine.MeshEngine`` -- including the per-round ``active_t``
+straggler masks, which ``_mix_and_aggregate`` folds into the combine
+row (one-pass schedules) or the delta rows (materializing schedules).
 """
 
 from __future__ import annotations
@@ -142,15 +149,32 @@ def zero_specs(specs: PyTree, params: PyTree, data_size: int) -> PyTree:
 def _mix_and_aggregate(mesh, mixing: str, deltas: PyTree, A: jnp.ndarray,
                        tau: jnp.ndarray, m: jnp.ndarray,
                        global_params: PyTree, msize: int,
-                       zero: bool = False) -> PyTree:
+                       zero: bool = False,
+                       active: Optional[jnp.ndarray] = None) -> PyTree:
     """new_global = global + (1/m) sum_i tau_i (A @ deltas)_i.
 
     All client-axis communication happens here: the D2D mixing over the
     intra-pod 'data' axis and the D2S psum over (pod, data).
+
+    ``active`` is the optional (n,) 0/1 straggler mask (``RoundPlan``
+    ``active_t``): dropped clients contribute zero delta and never
+    upload; ``m`` must then be the effective sampled-and-active count.
+    The one-pass schedules ('fused'/'fused_rs') fold the mask into the
+    precombined weight row (``combine_weights``) -- zero payload cost;
+    the materializing schedules zero the dropped rows before eq. 3.  An
+    all-ones mask is bitwise-identical to ``active=None``.
     """
     caxes = client_axes(mesh)
     n_data = data_axis_size(mesh)
     n = n_clients_of(mesh)
+
+    if active is not None and mixing in ("ring", "gather", "einsum"):
+        act = active.astype(jnp.float32)
+        deltas = jax.tree.map(
+            lambda d: d * act.astype(d.dtype).reshape(
+                (n,) + (1,) * (d.ndim - 1)),
+            deltas)
+        tau = tau * act
 
     if mixing == "einsum":
         # paper eq. (3) verbatim at the jit level; XLA picks the schedule.
@@ -185,7 +209,7 @@ def _mix_and_aggregate(mesh, mixing: str, deltas: PyTree, A: jnp.ndarray,
 
         spec = packing.pack_spec(deltas)
         bufs = packing.pack(deltas, spec)           # per-group (n, P_pad_g)
-        w = combine_weights(A, tau, m)
+        w = combine_weights(A, tau, m, active)
         agg_rows = tuple(
             jnp.einsum("j,jp->p", w, b.astype(jnp.float32),
                        preferred_element_type=jnp.float32)
@@ -207,7 +231,7 @@ def _mix_and_aggregate(mesh, mixing: str, deltas: PyTree, A: jnp.ndarray,
         # reduce-scatters evenly over 'data' on its own
         spec = packing.pack_spec(deltas, shards=n_data)
         bufs = packing.pack(deltas, spec)           # per-group (n, P_pad_g)
-        w = combine_weights(A, tau, m)                     # (n,) fp32
+        w = combine_weights(A, tau, m, active)             # (n,) fp32
 
         def rs_body(bs, wv):
             outs = []
@@ -307,12 +331,14 @@ def _mix_and_aggregate(mesh, mixing: str, deltas: PyTree, A: jnp.ndarray,
 def make_train_step(cfg: ModelConfig, mesh, mixing: str = "ring",
                     jit: bool = True, zero: bool = False,
                     client_impl: str = "vmap"):
-    """Build ``train_step(global_params, tokens, A, tau, m, eta[, prefix])``.
+    """Build ``train_step(global_params, tokens, A, tau, m, eta[, prefix]
+    [, active])``.
 
     tokens: (n_clients, T, B_local, S+1) int32 -- per-client, per-local-step
     minibatches; inputs/targets are adjacent slices.  prefix (audio/vlm):
-    (n_clients, T, B_local, P, fdim).  Returns the new global params
-    (same sharding as the input -- rounds compose).
+    (n_clients, T, B_local, P, fdim).  active: optional (n,) 0/1
+    straggler mask (see ``_mix_and_aggregate``).  Returns the new global
+    params (same sharding as the input -- rounds compose).
 
     ``client_impl``:
       'vmap'      -- batch the client axis; GSPMD partitions it (default).
@@ -334,7 +360,8 @@ def make_train_step(cfg: ModelConfig, mesh, mixing: str = "ring",
     caxes = client_axes(mesh)
     msize = model_axis_size(mesh)
 
-    def train_step(global_params, tokens, A, tau, m, eta, prefix=None):
+    def train_step(global_params, tokens, A, tau, m, eta, prefix=None,
+                   active=None):
         cspecs = shard_rules.param_specs(global_params, msize,
                                          prefix=(caxes,))
         cshard = _shardings(mesh, cspecs)
@@ -413,7 +440,8 @@ def make_train_step(cfg: ModelConfig, mesh, mixing: str = "ring",
 
         # 3.+4. D2D mixing + D2S sampled aggregation
         return _mix_and_aggregate(mesh, mixing, deltas, A, tau, m,
-                                  global_params, msize, zero=zero)
+                                  global_params, msize, zero=zero,
+                                  active=active)
 
     if not jit:
         return train_step
@@ -435,11 +463,13 @@ def make_scanned_train_steps(cfg: ModelConfig, mesh, K: int,
     K-round program compiles and dispatches to the mesh ONCE:
 
     ``scanned(global_params, tokens_seq, A_seq, tau_seq, m_seq, eta_seq[,
-    prefix_seq]) -> (final_params, params_seq)``
+    prefix_seq][, active_seq]) -> (final_params, params_seq)``
 
       - tokens_seq: (K, n_clients, T, B_local, S+1) stacked round batches
         (prefix_seq, when given: (K, n_clients, T, B_local, P, fdim))
       - A_seq (K, n, n), tau_seq (K, n), m_seq (K,), eta_seq (K,)
+      - active_seq: optional (K, n) stacked straggler masks (the
+        ``RoundPlan`` ``active_t`` column)
       - params_seq leaves: (K, ...) -- global params after each round
         (``params_seq[K-1] == final_params``), so per-round evaluation and
         ``History`` bookkeeping stay exact.
@@ -453,14 +483,21 @@ def make_scanned_train_steps(cfg: ModelConfig, mesh, K: int,
                            client_impl=client_impl)
 
     def scanned(global_params, tokens_seq, A_seq, tau_seq, m_seq, eta_seq,
-                prefix_seq=None):
+                prefix_seq=None, active_seq=None):
         def body(params, xs):
-            new = step(params, *xs)
+            tokens, A, tau, m, eta = xs[:5]
+            rest = list(xs[5:])
+            prefix = rest.pop(0) if prefix_seq is not None else None
+            active = rest.pop(0) if active_seq is not None else None
+            new = step(params, tokens, A, tau, m, eta, prefix=prefix,
+                       active=active)
             return new, new
 
         xs = (tokens_seq, A_seq, tau_seq, m_seq, eta_seq)
         if prefix_seq is not None:
             xs = xs + (prefix_seq,)
+        if active_seq is not None:
+            xs = xs + (active_seq,)
         final, params_seq = jax.lax.scan(body, global_params, xs, length=K)
         return final, params_seq
 

@@ -1,0 +1,277 @@
+"""Runtime engines: execute a ``RoundPlan`` and return a ``History``.
+
+This module is the ONLY place that knows how an abstract execution
+request (``ExecutionConfig``) maps onto a compiled runtime: the
+backend-selection matrix that used to be smeared across ``FederatedServer``
+kwargs lives in ``resolve_backend`` and nowhere else.
+
+    ExecutionConfig   what to run: backend name, scan on/off, mixed-delta
+                      recording, kernel knobs (chunk/interpret), jit, and
+                      -- for the mesh runtime -- the mesh + model config.
+    Engine            the protocol: ``execute(plan, params, batches, ...)
+                      -> (final_params, History)``.
+    LocalEngine       single-host runtime over ``repro.core.rounds``
+                      (``make_round_fn`` / ``make_scanned_rounds``).
+    MeshEngine        mesh runtime over ``repro.fl.distributed``
+                      (``make_train_step`` / ``make_scanned_train_steps``).
+    make_engine       ExecutionConfig -> the right engine.
+
+Backend selection (one matrix, one place)::
+
+    runtime      backends                       record_mixed     scan
+    -----------  -----------------------------  ---------------  ----
+    LocalEngine  einsum | pallas | fused        False upgrades    yes
+                 | aggregate                    pallas/fused ->
+                                                'aggregate'
+    MeshEngine   ring | gather | einsum         unsupported       yes
+                 | fused | fused_rs
+
+Straggler masks: when ``plan.has_dropout`` the per-round ``active_t``
+column is threaded into the round functions (inactive clients contribute
+zero delta and are renormalized out of the ``(tau^T A)/m`` combine row);
+all-ones plans skip the mask plumbing entirely, so full participation is
+bitwise-identical to the pre-plan runtime.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.metrics import CommLedger
+from repro.core.rounds import MIXING_BACKENDS, make_round_fn, \
+    make_scanned_rounds
+from repro.core.server import History, RoundRecord
+from .distributed import MIXINGS, make_scanned_train_steps, make_train_step
+from .plan import RoundPlan
+
+__all__ = ["ExecutionConfig", "Engine", "LocalEngine", "MeshEngine",
+           "make_engine", "resolve_backend"]
+
+PyTree = Any
+EvalFn = Callable[[PyTree], Dict[str, float]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionConfig:
+    """How to execute a plan -- the single runtime-selection object.
+
+    ``backend`` names a single-host mixing backend (``MIXING_BACKENDS``)
+    or, when ``mesh`` is set, a mesh mixing schedule (``MIXINGS``).
+    ``scan=True`` compiles the whole K-round trajectory into one
+    ``lax.scan`` dispatch.  ``record_mixed=True`` keeps per-client mixed
+    deltas materialized (single-host only); otherwise the kernel backends
+    upgrade to the aggregate-only fast path.  ``chunk``/``interpret``
+    tune the Pallas kernels (``interpret=None`` resolves per platform).
+    """
+    backend: str = "einsum"
+    scan: bool = False
+    record_mixed: bool = False
+    chunk: int = 2048
+    interpret: Optional[bool] = None
+    jit: bool = True
+    mesh: Any = None
+    model_cfg: Any = None
+
+
+def resolve_backend(cfg: ExecutionConfig) -> str:
+    """Validate ``cfg`` and return the *effective* backend name.
+
+    The entire backend-selection matrix: mesh vs single-host, the
+    record_mixed upgrade to 'aggregate', and every invalid combination.
+    """
+    if cfg.mesh is not None:
+        if cfg.model_cfg is None:
+            raise ValueError("mesh runtime requires model_cfg")
+        if cfg.backend not in MIXINGS:
+            raise ValueError(f"mesh mixing must be one of {MIXINGS}")
+        if cfg.record_mixed:
+            raise ValueError(
+                "record_mixed is not supported on the mesh runtime: "
+                "the mesh train step never returns mixed deltas")
+        return cfg.backend
+    if cfg.backend not in MIXING_BACKENDS:
+        raise ValueError(
+            f"mixing_backend must be one of {MIXING_BACKENDS}, "
+            f"got {cfg.backend!r}")
+    if cfg.record_mixed and cfg.backend == "aggregate":
+        raise ValueError(
+            "record_mixed=True contradicts the 'aggregate' backend, "
+            "which never materializes mixed deltas")
+    # History never records per-client mixed deltas, so unless the caller
+    # explicitly keeps them, the kernel backends dispatch the
+    # aggregate-only fast path (~3x less payload traffic).
+    if not cfg.record_mixed and cfg.backend in ("pallas", "fused"):
+        return "aggregate"
+    return cfg.backend
+
+
+class Engine(Protocol):
+    """A compiled runtime that can execute a ``RoundPlan``."""
+
+    backend: str   # effective backend (post resolve_backend)
+
+    def execute(self, plan: RoundPlan, params: PyTree,
+                batches: List[PyTree], *, eval_fn: Optional[EvalFn] = None,
+                eval_every: int = 1, energy_ratio: float = 0.1
+                ) -> Tuple[PyTree, History]:
+        """Run every round of ``plan`` from ``params``.
+
+        ``batches`` is the per-round list (length ``plan.n_rounds``) of
+        whatever the runtime's round function consumes -- batch pytrees
+        (LocalEngine) or token arrays (MeshEngine).  Returns the final
+        params and the filled ``History``.
+        """
+        ...
+
+
+def _device_columns(plan: RoundPlan):
+    """Plan columns as stacked device arrays (the scan inputs; sequential
+    execution indexes into them, which keeps the per-round values
+    identical across both drivers)."""
+    A_seq = jnp.asarray(plan.A_t, jnp.float32)
+    tau_seq = jnp.asarray(plan.tau_t, jnp.float32)
+    m_seq = jnp.asarray(plan.m_t, jnp.float32)
+    eta_seq = jnp.asarray(plan.eta_t, jnp.float32)
+    active_seq = (jnp.asarray(plan.active_t, jnp.float32)
+                  if plan.has_dropout else None)
+    return A_seq, tau_seq, m_seq, eta_seq, active_seq
+
+
+def _record(plan: RoundPlan, t: int) -> RoundRecord:
+    return RoundRecord(
+        t=t, m=int(plan.m_planned_t[t]), m_actual=int(plan.m_actual_t[t]),
+        psi_bound=float(plan.psi_bound_t[t]), d2s=int(plan.d2s_t[t]),
+        d2d=int(plan.d2d_t[t]), eta=float(plan.eta_t[t]))
+
+
+def _check_batches(plan: RoundPlan, batches) -> None:
+    if len(batches) != plan.n_rounds:
+        raise ValueError(
+            f"need one batch entry per plan round: plan has "
+            f"{plan.n_rounds} rounds, got {len(batches)} batches")
+
+
+def _append_record(plan: RoundPlan, history: History, t: int, get_params,
+                   eval_fn: Optional[EvalFn], eval_every: int) -> None:
+    """One ``RoundRecord`` (+ ledger row) for round ``t``;
+    ``get_params()`` yields the post-round globals, called only on the
+    eval cadence (so drivers never retain params just for bookkeeping)."""
+    rec = _record(plan, t)
+    if eval_fn is not None and (t % eval_every == 0
+                                or t == plan.n_rounds - 1):
+        rec.metrics = {k: float(v)
+                       for k, v in eval_fn(get_params()).items()}
+    history.records.append(rec)
+    history.ledger.add_round(d2s=rec.d2s, d2d=rec.d2d)
+
+
+def _fill_history(plan: RoundPlan, history: History, params_at,
+                  eval_fn: Optional[EvalFn], eval_every: int) -> None:
+    """Append every round's record; ``params_at(t)`` yields the
+    post-round-``t`` params (the scan drivers' stacked ``params_seq``)."""
+    for t in range(plan.n_rounds):
+        _append_record(plan, history, t, lambda tt=t: params_at(tt),
+                       eval_fn, eval_every)
+
+
+class LocalEngine:
+    """Single-host runtime: ``repro.core.rounds`` round functions."""
+
+    def __init__(self, loss_fn, cfg: ExecutionConfig):
+        if cfg.mesh is not None:
+            raise ValueError("LocalEngine does not take a mesh; use "
+                             "MeshEngine (or make_engine)")
+        self.cfg = cfg
+        self.loss_fn = loss_fn
+        self.backend = resolve_backend(cfg)
+
+    def execute(self, plan, params, batches, *, eval_fn=None, eval_every=1,
+                energy_ratio=0.1):
+        _check_batches(plan, batches)
+        cfg = self.cfg
+        K = plan.n_rounds
+        A_seq, tau_seq, m_seq, eta_seq, active_seq = _device_columns(plan)
+        history = History(algorithm=plan.algorithm,
+                          ledger=CommLedger(energy_ratio=energy_ratio))
+
+        if cfg.scan:
+            scanned = make_scanned_rounds(
+                self.loss_fn, K, jit=cfg.jit, mixing_backend=self.backend,
+                chunk=cfg.chunk, interpret=cfg.interpret)
+            batches_seq = jax.tree.map(lambda *bs: jnp.stack(bs), *batches)
+            params, params_seq = scanned(params, batches_seq, A_seq,
+                                         tau_seq, m_seq, eta_seq,
+                                         active_seq)
+            _fill_history(plan, history,
+                          lambda t: jax.tree.map(lambda x: x[t], params_seq),
+                          eval_fn, eval_every)
+            return params, history
+
+        round_fn = make_round_fn(self.loss_fn, jit=cfg.jit,
+                                 mixing_backend=self.backend,
+                                 chunk=cfg.chunk, interpret=cfg.interpret)
+        for t in range(K):
+            args = (params, batches[t], A_seq[t], tau_seq[t], m_seq[t],
+                    eta_seq[t])
+            if active_seq is not None:
+                args = args + (active_seq[t],)
+            params, _ = round_fn(*args)
+            # record inline: only the current round's params stay live
+            _append_record(plan, history, t, lambda p=params: p,
+                           eval_fn, eval_every)
+        return params, history
+
+
+class MeshEngine:
+    """Mesh runtime: ``repro.fl.distributed`` train steps.  ``batches``
+    entries are per-round token arrays ``(n_clients, T, B_local, S+1)``."""
+
+    def __init__(self, cfg: ExecutionConfig):
+        if cfg.mesh is None:
+            raise ValueError("MeshEngine requires cfg.mesh")
+        self.cfg = cfg
+        self.backend = resolve_backend(cfg)
+
+    def execute(self, plan, params, batches, *, eval_fn=None, eval_every=1,
+                energy_ratio=0.1):
+        _check_batches(plan, batches)
+        cfg = self.cfg
+        K = plan.n_rounds
+        A_seq, tau_seq, m_seq, eta_seq, active_seq = _device_columns(plan)
+        history = History(algorithm=plan.algorithm,
+                          ledger=CommLedger(energy_ratio=energy_ratio))
+
+        if cfg.scan:
+            scanned = make_scanned_train_steps(
+                cfg.model_cfg, cfg.mesh, K, mixing=self.backend,
+                jit=cfg.jit)
+            tokens_seq = jax.tree.map(lambda *bs: jnp.stack(bs), *batches)
+            params, params_seq = scanned(params, tokens_seq, A_seq,
+                                         tau_seq, m_seq, eta_seq,
+                                         active_seq=active_seq)
+            _fill_history(plan, history,
+                          lambda t: jax.tree.map(lambda x: x[t], params_seq),
+                          eval_fn, eval_every)
+            return params, history
+
+        step = make_train_step(cfg.model_cfg, cfg.mesh,
+                               mixing=self.backend, jit=cfg.jit)
+        for t in range(K):
+            kw = {} if active_seq is None else {"active": active_seq[t]}
+            params = step(params, batches[t], A_seq[t], tau_seq[t],
+                          m_seq[t], eta_seq[t], **kw)
+            _append_record(plan, history, t, lambda p=params: p,
+                           eval_fn, eval_every)
+        return params, history
+
+
+def make_engine(cfg: ExecutionConfig, loss_fn=None) -> Engine:
+    """ExecutionConfig -> the engine that implements it.  The only
+    runtime dispatch the server (or any driver) needs."""
+    if cfg.mesh is not None:
+        return MeshEngine(cfg)
+    return LocalEngine(loss_fn, cfg)

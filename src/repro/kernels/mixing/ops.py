@@ -65,23 +65,38 @@ def _pad_inputs(A, X, chunk):
     return A_p, X_p, n, p
 
 
-def combine_weights(A: jnp.ndarray, tau: jnp.ndarray,
-                    m: jnp.ndarray) -> jnp.ndarray:
+def combine_weights(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
+                    active: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Precombined D2S weight row ``w = (tau^T A) / m`` (fp32, shape (n,)).
 
     The algebraic identity ``(1/m) sum_i tau_i (A X)_i = w @ X`` is what
     every one-pass aggregate path (fused kernel, jit-level 'fused', the
     worker-sharded 'fused_rs') exploits; this is its single definition.
+
+    ``active`` is the optional (n,) 0/1 straggler mask (``RoundPlan``
+    ``active_t`` column): a dropped client neither uploads (its row of
+    ``tau`` is zeroed) nor contributes a delta to its neighbors (its
+    *column* of the combine row is zeroed) -- algebraically identical to
+    zeroing its payload row, without touching the payload.  ``m`` must
+    already be the effective sampled-and-active count (the plan's
+    renormalized ``m_t``).  An all-ones mask is bitwise-identical to
+    passing ``active=None``.
     """
-    return jnp.einsum("i,ij->j", tau.astype(jnp.float32),
-                      A.astype(jnp.float32),
-                      preferred_element_type=jnp.float32) / m
+    tau = tau.astype(jnp.float32)
+    if active is not None:
+        act = active.astype(jnp.float32)
+        tau = tau * act
+    w = jnp.einsum("i,ij->j", tau, A.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) / m
+    if active is not None:
+        w = w * act
+    return w
 
 
-def _weight_row(A, tau, m, n_pad):
+def _weight_row(A, tau, m, n_pad, active=None):
     """``combine_weights`` padded to the sublane multiple with the real
     weights in row 0 (the layout the fused kernels consume)."""
-    w = combine_weights(A, tau, m)
+    w = combine_weights(A, tau, m, active)
     n = w.shape[0]
     return jnp.zeros((_SUBLANE, n_pad), jnp.float32).at[0, :n].set(w)
 
@@ -116,17 +131,23 @@ def mix_pytree(A: jnp.ndarray, deltas: PyTree, *, chunk: int = 2048,
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def mix_aggregate(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
                   X: jnp.ndarray, *, chunk: int = 2048,
-                  interpret: Optional[bool] = None
+                  interpret: Optional[bool] = None,
+                  active: Optional[jnp.ndarray] = None
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused eq. 3 + eq. 4 over an arbitrary (n, p) payload.
 
     Returns ``(mixed, agg)``: mixed (n, p) in X.dtype and the float32
     aggregate row agg (p,) = ``(1/m) sum_i tau_i (A @ X)_i``, computed
     from one streaming pass over ``X``.
+
+    ``active`` folds a straggler mask into the aggregate row (see
+    ``combine_weights``); the *mixed* output reflects dropped clients
+    only if the caller already zeroed their rows of ``X`` (the payload
+    is streamed as given).
     """
     interpret = resolve_interpret(interpret)
     A_p, X_p, n, p = _pad_inputs(A, X, chunk)
-    w_p = _weight_row(A, tau, m, A_p.shape[0])
+    w_p = _weight_row(A, tau, m, A_p.shape[0], active)
     mixed, agg = mix_aggregate_pallas(A_p, w_p, X_p, chunk=chunk,
                                       interpret=interpret)
     return mixed[:n, :p], agg[0, :p]
@@ -135,13 +156,16 @@ def mix_aggregate(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def aggregate(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
               X: jnp.ndarray, *, chunk: int = 2048,
-              interpret: Optional[bool] = None) -> jnp.ndarray:
+              interpret: Optional[bool] = None,
+              active: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Aggregate-only fast path: the float32 row
     ``(1/m) sum_i tau_i (A @ X)_i = ((tau^T A) / m) @ X`` (p,), reading
-    ``X`` once and never materializing the mixed deltas."""
+    ``X`` once and never materializing the mixed deltas.  A straggler
+    mask (``active``) costs nothing here: dropped clients are folded
+    into the combine row, the payload is untouched."""
     interpret = resolve_interpret(interpret)
     A_p, X_p, n, p = _pad_inputs(A, X, chunk)
-    w_p = _weight_row(A, tau, m, A_p.shape[0])
+    w_p = _weight_row(A, tau, m, A_p.shape[0], active)
     agg = aggregate_pallas(w_p, X_p, chunk=chunk, interpret=interpret)
     return agg[0, :p]
 
@@ -151,7 +175,8 @@ def mix_aggregate_grouped(A: jnp.ndarray, tau: jnp.ndarray,
                           m: jnp.ndarray,
                           bufs: Tuple[jnp.ndarray, ...], *,
                           chunk: int = 2048,
-                          interpret: Optional[bool] = None
+                          interpret: Optional[bool] = None,
+                          active: Optional[jnp.ndarray] = None
                           ) -> Tuple[Tuple[jnp.ndarray, ...],
                                      Tuple[jnp.ndarray, ...]]:
     """Fused eq. 3 + eq. 4 over a dtype-grouped packed tree: one fused
@@ -162,7 +187,8 @@ def mix_aggregate_grouped(A: jnp.ndarray, tau: jnp.ndarray,
     buffers in the group dtypes and per-group fp32 aggregate rows, ready
     for ``packing.unpack`` / ``packing.apply_aggregate_row``.
     """
-    out = [mix_aggregate(A, tau, m, b, chunk=chunk, interpret=interpret)
+    out = [mix_aggregate(A, tau, m, b, chunk=chunk, interpret=interpret,
+                         active=active)
            for b in bufs]
     return tuple(mb for mb, _ in out), tuple(r for _, r in out)
 
@@ -170,10 +196,12 @@ def mix_aggregate_grouped(A: jnp.ndarray, tau: jnp.ndarray,
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def aggregate_grouped(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
                       bufs: Tuple[jnp.ndarray, ...], *, chunk: int = 2048,
-                      interpret: Optional[bool] = None
+                      interpret: Optional[bool] = None,
+                      active: Optional[jnp.ndarray] = None
                       ) -> Tuple[jnp.ndarray, ...]:
     """Aggregate-only variant of ``mix_aggregate_grouped``: per-group
     fp32 rows ``((tau^T A) / m) @ X_g``, one launch per dtype group, the
     mixed deltas never materialized."""
-    return tuple(aggregate(A, tau, m, b, chunk=chunk, interpret=interpret)
+    return tuple(aggregate(A, tau, m, b, chunk=chunk, interpret=interpret,
+                           active=active)
                  for b in bufs)

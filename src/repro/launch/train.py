@@ -8,6 +8,12 @@ synthetic MNIST-shaped dataset, T=5 local SGD steps.
   PYTHONPATH=src python -m repro.launch.train --algorithm semidec \\
       --rounds 30 --phi-max 0.06 --p 0.1
   PYTHONPATH=src python -m repro.launch.train --algorithm fedavg --m 57
+
+Runtime selection is one ``ExecutionConfig`` (``--backend``, ``--scan``);
+trajectories are first-class ``RoundPlan`` artifacts: ``--plan-out``
+saves the executed plan as JSON, ``--plan`` replays a saved one
+verbatim, and ``--dropout RATE`` adds per-round client stragglers as a
+plan column (partial participation inside a cluster).
 """
 
 from __future__ import annotations
@@ -25,6 +31,8 @@ from repro.core.graphs import D2DNetwork
 from repro.core.server import FederatedServer, ServerConfig
 from repro.data import (FederatedBatcher, label_sorted_partition,
                         make_classification)
+from repro.core.rounds import MIXING_BACKENDS
+from repro.fl import ExecutionConfig, RoundPlan
 from repro.models import cnn as cnn_lib
 
 
@@ -63,6 +71,20 @@ def main(argv=None) -> int:
     ap.add_argument("--lr-decay", type=float, default=0.1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--samples", type=int, default=7000)
+    ap.add_argument("--backend", default="einsum",
+                    choices=MIXING_BACKENDS,
+                    help="mixing backend (ExecutionConfig.backend)")
+    ap.add_argument("--scan", action="store_true",
+                    help="compile the whole trajectory into one "
+                         "lax.scan dispatch")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="per-round client straggler probability "
+                         "(adds an active_t column to the plan)")
+    ap.add_argument("--plan", default="",
+                    help="replay a saved RoundPlan JSON instead of "
+                         "planning here")
+    ap.add_argument("--plan-out", default="",
+                    help="save the executed RoundPlan as JSON")
     ap.add_argument("--out", default="")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
@@ -94,8 +116,22 @@ def main(argv=None) -> int:
         m_fixed=args.m, seed=args.seed,
         eta=lambda t: args.lr0 * (args.lr_decay ** t))
     server = FederatedServer(network, loss_fn, params, batcher, cfg,
-                             algorithm=args.algorithm)
-    history = server.run(eval_fn=eval_fn)
+                             algorithm=args.algorithm,
+                             execution=ExecutionConfig(
+                                 backend=args.backend, scan=args.scan))
+    plan = RoundPlan.load(args.plan) if args.plan else None
+    if args.dropout > 0:
+        if plan is None:
+            gen_args = (network, cfg)
+            plan = {"semidec": RoundPlan.connectivity_aware,
+                    "fedavg": RoundPlan.fedavg,
+                    "colrel": RoundPlan.colrel}[args.algorithm](*gen_args)
+        plan = plan.with_dropout(args.dropout,
+                                 np.random.default_rng(args.seed + 1))
+    history = server.run(eval_fn=eval_fn, plan=plan)
+    if args.plan_out:
+        server.last_plan.save(args.plan_out)
+        print(f"trajectory saved to {args.plan_out}")
 
     rows = []
     for rec in history.records:

@@ -11,7 +11,10 @@ every mixing schedule under test:
 
 plus the server-level half of the property: ``FederatedServer(mesh=...,
 scan_rounds=True)`` produces History records, metrics, and final params
-identical to the sequential mesh driver.
+identical to the sequential mesh driver; plus the straggler-mask matrix
+(ISSUE 4): per mixing schedule, an all-ones ``active`` mask is bitwise
+a no-op, a dropped-client round matches the single-host dense oracle,
+and ``active_seq`` threads through the scanned driver bitwise.
 
 Run with XLA_FLAGS=--xla_force_host_platform_device_count=8.  Exits
 non-zero (assertion) on mismatch; prints OK lines otherwise.
@@ -172,10 +175,73 @@ def check_server_mesh_scan() -> None:
         print(f"OK server scan mixing={mixing}", flush=True)
 
 
+def check_active_mask_equivalence() -> None:
+    """Straggler masks on the mesh runtime: for every mixing schedule,
+    (a) an all-ones ``active`` is bitwise-identical to passing no mask,
+    (b) a round with dropped clients matches the single-host dense
+    oracle (zero the dropped deltas, remove their uploads, renormalize),
+    and (c) the scanned driver threads ``active_seq`` bitwise."""
+    from repro.core.rounds import make_round_fn
+
+    mesh = make_debug_mesh((2, 2, 2))
+    n, T, B, S, K = 4, 2, 2, 16, 2
+    cfg = _tiny_cfg()
+    model = Model(cfg)
+    params = model.init(jax.random.key(2))
+    rng = np.random.default_rng(5)
+    toks, A_seq, tau_seq, m_seq, eta_seq = _trajectory(rng, n, T, B, S, K)
+    tau_seq = jnp.ones((K, n), jnp.float32)        # sample everyone...
+    act_seq = jnp.asarray([[1, 0, 1, 1],           # ...then drop clients
+                           [1, 1, 0, 0]], jnp.float32)
+    m_seq = jnp.maximum((tau_seq * act_seq).sum(axis=1), 1.0)
+
+    oracle_fn = make_round_fn(model.loss, jit=True)
+    ones = jnp.ones((K, n), jnp.float32)
+
+    for mixing in MIXINGS_UNDER_TEST:
+        step = make_train_step(cfg, mesh, mixing=mixing)
+        ref = params
+        for t in range(K):
+            batches = (toks[t][..., :-1], toks[t][..., 1:])
+            ref, _ = oracle_fn(ref, batches, A_seq[t], tau_seq[t],
+                               m_seq[t], eta_seq[t], act_seq[t])
+
+        seq = params
+        for t in range(K):
+            seq = step(seq, toks[t], A_seq[t], tau_seq[t], m_seq[t],
+                       eta_seq[t], active=act_seq[t])
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(seq)):
+            np.testing.assert_allclose(
+                np.asarray(b, np.float32), np.asarray(a, np.float32),
+                rtol=2e-4, atol=2e-5,
+                err_msg=f"active-mask oracle mixing={mixing}")
+
+        # all-ones mask: bitwise no-op vs the unmasked step
+        plain = step(params, toks[0], A_seq[0], tau_seq[0],
+                     jnp.float32(n), eta_seq[0])
+        masked = step(params, toks[0], A_seq[0], tau_seq[0],
+                      jnp.float32(n), eta_seq[0], active=ones[0])
+        for a, b in zip(jax.tree.leaves(plain), jax.tree.leaves(masked)):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"all-ones active mixing={mixing}")
+
+        # scanned == sequential with the mask threaded through the scan
+        scanned = make_scanned_train_steps(cfg, mesh, K, mixing=mixing)
+        final, _ = scanned(params, toks, A_seq, tau_seq, m_seq, eta_seq,
+                           active_seq=act_seq)
+        for a, b in zip(jax.tree.leaves(seq), jax.tree.leaves(final)):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"active scan mixing={mixing}")
+        print(f"OK active mixing={mixing}", flush=True)
+
+
 def main() -> None:
     assert len(jax.devices()) == 8, jax.devices()
     check_scan_equivalence()
     check_server_mesh_scan()
+    check_active_mask_equivalence()
 
 
 if __name__ == "__main__":

@@ -66,6 +66,7 @@ def test_mesh_scan_matrix_matches_sequential_and_oracle():
     assert r.returncode == 0, r.stdout + r.stderr
     for mixing in ("einsum", "fused", "fused_rs", "ring"):
         assert f"OK scan mixing={mixing}" in r.stdout
+        assert f"OK active mixing={mixing}" in r.stdout
     for mixing in ("einsum", "fused"):
         assert f"OK server scan mixing={mixing}" in r.stdout
 
