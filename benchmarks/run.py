@@ -2,6 +2,8 @@
 
   singular_bounds -- Sec. 5 bound tightness (Prop 5.1 / 5.2)
   comm_cost       -- Figs. 2-5 (high/low D2S regimes)
+  dropout_sweep   -- d2s/d2d-per-accuracy over dropout rate x topology
+                     family x straggler model (iid vs bursty Markov)
   convergence     -- Theorem 4.5 O(1/t) envelope
   mixing_kernel   -- Pallas D2D-mixing kernel vs oracle
   roofline_table  -- §Roofline terms from dry-run artifacts (if present)
@@ -32,11 +34,12 @@ import argparse
 import json
 import time
 
-from . import (comm_cost, convergence, mixing_kernel, roofline_table,
-               singular_bounds, topology_ablation)
+from . import (comm_cost, convergence, dropout_sweep, mixing_kernel,
+               roofline_table, singular_bounds, topology_ablation)
 
 BENCHES = ("singular_bounds", "topology_ablation", "comm_cost",
-           "convergence", "mixing_kernel", "roofline_table")
+           "dropout_sweep", "convergence", "mixing_kernel",
+           "roofline_table")
 
 # payload-byte fields pinned by --check-baseline: deterministic models /
 # measurements (never wall times), so any increase is a real regression
@@ -137,6 +140,10 @@ def main(argv=None) -> int:
             rounds = 6 if args.fast else 15
             results[name] = (comm_cost.run("high", rounds=rounds)
                              + comm_cost.run("low", rounds=rounds))
+        elif name == "dropout_sweep":
+            results[name] = dropout_sweep.run(
+                rates=(0.0, 0.2) if args.fast else (0.0, 0.1, 0.3),
+                rounds=3 if args.fast else 6)
         elif name == "convergence":
             results[name] = convergence.run(rounds=10 if args.fast else 40,
                                             plan_path=args.plan)

@@ -3,7 +3,8 @@
 Connectivity-aware semi-decentralized federated learning over time-varying
 directed D2D cluster networks:
 
-* ``graphs``    -- time-varying digraph clusters (Sec. 2.2, 6.1.1)
+* ``graphs``    -- digraph primitives + the deprecated ``D2DNetwork``
+  shim (graph *generation* lives in the ``repro.topology`` registry)
 * ``adjacency`` -- equal-neighbor column-stochastic matrices (Sec. 3.2)
 * ``bounds``    -- singular-value bounds & connectivity factor (Sec. 3.3, 5)
 * ``sampling``  -- the m(t) threshold rule + proportional sampling (Sec. 3.3)

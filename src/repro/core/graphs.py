@@ -1,5 +1,10 @@
 """Time-varying directed D2D cluster graphs (paper Sec. 2.2, 6.1.1).
 
+This module holds the graph *primitives* (adjacency constructors, degree
+statistics, ``ClusterGraph``); graph *generation* is the declarative
+``repro.topology`` registry -- ``D2DNetwork`` below survives only as a
+thin deprecated shim over its ``k_regular`` family.
+
 All host-side server math is numpy (the parameter server is the host); the
 jitted round functions in ``repro.core.rounds`` consume the resulting dense
 arrays as runtime inputs, so topology changes never trigger recompilation.
@@ -162,11 +167,15 @@ class ClusterGraph:
 
 @dataclasses.dataclass
 class D2DNetwork:
-    """The time-varying D2D network G(t): ``c`` clusters over ``n`` clients.
+    """Deprecated shim: the paper's Sec. 6.1.1 generative model, now a
+    thin wrapper over ``repro.topology``'s ``k_regular`` family.
 
-    ``sample(rng)`` draws one snapshot per the paper's generative model
-    (Sec. 6.1.1): per cluster, a k-regular digraph with ``k`` uniform on
-    ``k_range``, followed by deletion of a fraction ``p`` of edges.
+    Prefer ``repro.topology.make_spec("k_regular", n=, c=, k_range=,
+    p_fail=).build()`` -- the declarative API covers every registered
+    family, serializes, and embeds in ``RoundPlan`` artifacts.  This
+    shim delegates ``sample`` to the registered model (bitwise-identical
+    rng stream) and exposes the equivalent ``spec``, so legacy callers
+    keep working and their plans still carry provenance.
     """
 
     n: int
@@ -177,6 +186,7 @@ class D2DNetwork:
     partition: Optional[List[np.ndarray]] = None
 
     def __post_init__(self) -> None:
+        explicit = self.partition is not None
         if self.partition is None:
             if self.n % self.c != 0:
                 raise ValueError("default partition needs c | n")
@@ -186,20 +196,36 @@ class D2DNetwork:
         sizes = [len(v) for v in self.partition]
         if sum(sizes) != self.n:
             raise ValueError("partition does not cover [n]")
+        self._explicit_partition = explicit
 
     @property
     def cluster_sizes(self) -> List[int]:
         return [len(v) for v in self.partition]
 
-    def sample(self, rng: np.random.Generator) -> List[ClusterGraph]:
-        """One G(t) snapshot: a list of c cluster digraphs."""
-        out = []
-        for verts in self.partition:
-            s = len(verts)
-            k = int(rng.integers(min(self.k_range), max(self.k_range) + 1))
-            k = min(k, s)
-            W = k_regular_digraph(s, k, rng, self_loops=self.self_loops)
-            if self.p_fail > 0:
-                W = delete_edge_fraction(W, self.p_fail, rng)
-            out.append(ClusterGraph(vertices=np.asarray(verts), W=W))
-        return out
+    @property
+    def spec(self):
+        """The equivalent ``repro.topology.TopologySpec`` (what
+        ``RoundPlan`` embeds as topology provenance)."""
+        # deferred: repro.topology imports this module at package init
+        from repro.topology import make_spec
+        if self._explicit_partition:
+            membership = "explicit"
+            m_params = {"partition": tuple(tuple(int(i) for i in v)
+                                           for v in self.partition)}
+        else:
+            membership, m_params = "equal", {}
+        return make_spec("k_regular", n=self.n, c=self.c,
+                         membership=membership, membership_params=m_params,
+                         k_range=tuple(int(k) for k in self.k_range),
+                         p_fail=float(self.p_fail),
+                         self_loops=bool(self.self_loops))
+
+    def sample(self, rng: np.random.Generator, t: int = 0
+               ) -> List[ClusterGraph]:
+        """One G(t) snapshot: a list of c cluster digraphs.
+
+        The model is rebuilt from ``spec`` per call: k_regular is
+        stateless, and the legacy class read its fields on every sample,
+        so post-construction mutation (sweep scripts tweaking
+        ``p_fail``/``k_range``) keeps working."""
+        return self.spec.build().sample(rng, t)

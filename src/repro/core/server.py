@@ -42,7 +42,6 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
-from .graphs import D2DNetwork
 from .metrics import CommLedger
 
 __all__ = ["ServerConfig", "RoundRecord", "History", "FederatedServer"]
@@ -107,14 +106,15 @@ _LEGACY_KWARGS = ("mixing_backend", "scan_rounds", "record_mixed", "mesh",
 class FederatedServer:
     """Runs ``t_max`` global rounds of the chosen algorithm.
 
-    ``execution`` (an ``repro.fl.engine.ExecutionConfig``) selects the
-    runtime; the legacy per-knob kwargs translate to it under a
-    ``DeprecationWarning``.  After ``run()``, ``self.last_plan`` holds
-    the executed ``RoundPlan`` (save it with ``last_plan.save(path)`` to
-    pin the trajectory).
+    ``network`` is any ``repro.topology.TopologyModel`` (the registered
+    families, or the deprecated ``D2DNetwork`` shim).  ``execution`` (an
+    ``repro.fl.engine.ExecutionConfig``) selects the runtime; the legacy
+    per-knob kwargs translate to it under a ``DeprecationWarning``.
+    After ``run()``, ``self.last_plan`` holds the executed ``RoundPlan``
+    (save it with ``last_plan.save(path)`` to pin the trajectory).
     """
 
-    def __init__(self, network: D2DNetwork, loss_fn, init_params: PyTree,
+    def __init__(self, network, loss_fn, init_params: PyTree,
                  batch_sampler: BatchSampler, config: ServerConfig,
                  algorithm: str = "semidec", jit: Optional[bool] = None,
                  execution=None,
@@ -196,7 +196,15 @@ class FederatedServer:
             for t in range(cfg.t_max):
                 rows.append(next(gen))
                 batches.append(self.batch_sampler(self.rng, t))
-            return RoundPlan.from_rows(rows, self.algorithm), batches
+            # topology provenance rides along; seed stays None because
+            # batch draws interleave on the same rng stream, so the
+            # columns are replayable (JSON) but not regenerable from
+            # seed alone -- use the RoundPlan constructors for that
+            from repro.topology import TopologySpec
+            spec = getattr(self.network, "spec", None)
+            spec = spec if isinstance(spec, TopologySpec) else None
+            return RoundPlan.from_rows(rows, self.algorithm,
+                                       topology=spec), batches
         if plan.n_clients != self.network.n:
             raise ValueError(
                 f"plan is for {plan.n_clients} clients, network has "

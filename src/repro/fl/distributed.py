@@ -83,7 +83,6 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.adjacency import network_matrix
-from repro.core.graphs import D2DNetwork
 from repro.models.config import ModelConfig
 from repro.models.model import Model
 from repro.models import sharding as shard_rules
@@ -558,11 +557,18 @@ def make_decode_step(cfg: ModelConfig, mesh, batch_axes, jit: bool = True,
 # topology inputs for the mesh round (host-side, paper Sec. 3.3)
 # ---------------------------------------------------------------------------
 
-def build_topology_inputs(network: D2DNetwork, rng: np.random.Generator,
-                          tau_idx: Optional[np.ndarray] = None
-                          ) -> Tuple[np.ndarray, Any]:
+def build_topology_inputs(network, rng: np.random.Generator,
+                          tau_idx: Optional[np.ndarray] = None,
+                          t: int = 0) -> Tuple[np.ndarray, Any]:
     """Sample G(t) and return (A, clusters) ready to feed the mesh step.
-    Client ordering must match the mesh flattening (pod-major)."""
-    clusters = network.sample(rng)
+    Client ordering must match the mesh flattening (pod-major).
+
+    ``network`` is any ``repro.topology`` model (or the deprecated
+    ``D2DNetwork`` shim); pass the round index ``t`` so time-correlated
+    families (geometric mobility, periodic re-clustering) advance
+    instead of resetting -- stateful models require consecutive
+    ``t = 0, 1, 2, ...``."""
+    from .plan import _sample_snapshot
+    clusters = _sample_snapshot(network, rng, t)
     A = network_matrix(clusters, network.n)
     return A.astype(np.float32), clusters

@@ -142,8 +142,11 @@ def _device_columns(plan: RoundPlan):
 
 
 def _record(plan: RoundPlan, t: int) -> RoundRecord:
+    # t is local to the plan; plan.t0 shifts sliced (resumed) plans so
+    # History round indices stay global across a crash/restore boundary
     return RoundRecord(
-        t=t, m=int(plan.m_planned_t[t]), m_actual=int(plan.m_actual_t[t]),
+        t=plan.t0 + t, m=int(plan.m_planned_t[t]),
+        m_actual=int(plan.m_actual_t[t]),
         psi_bound=float(plan.psi_bound_t[t]), d2s=int(plan.d2s_t[t]),
         d2d=int(plan.d2d_t[t]), eta=float(plan.eta_t[t]))
 

@@ -38,18 +38,34 @@ Constructors map one-to-one onto the algorithms the server runs:
 driver can interleave plan rows with its own draws (batch sampling) on a
 shared generator and reproduce pre-plan trajectories bitwise.
 
+Topology provenance: ``network`` is any ``repro.topology`` model (the
+``TopologyModel`` protocol -- ``sample(rng, t)`` may be time-correlated,
+e.g. ``geometric`` mobility).  When the network exposes a serializable
+``spec`` and the plan was seeded (``rng=None``), the constructors embed
+``(topology, seed)`` in the plan, its JSON carries them, and
+``plan.regenerate()`` rebuilds every column bitwise from the spec --
+plans are *regenerable* artifacts, not only replayable ones.
+
 Straggler support is a plan *transform*, not a runtime flag:
-``plan.with_dropout(rate, rng)`` (or ``plan.with_active(mask)``) returns
-a new plan whose ``active_t`` drops clients and whose ``m_t``/``d2s``
-bookkeeping is renormalized to the surviving uploads.
+``plan.with_dropout(rate, rng)`` draws i.i.d. masks,
+``plan.with_markov_dropout(p_fail, p_recover)`` bursty two-state chains
+per client, ``plan.with_cluster_dropout(rate)`` whole-cluster outages,
+and ``plan.with_active(mask)`` takes any explicit mask; all renormalize
+the ``m_t``/``d2s`` bookkeeping to the surviving uploads.
+
+Round-resumable: ``plan[t0:]`` slices the trajectory (columns +
+bookkeeping preserved, ``t0`` recorded so History round indices stay
+global), so a crashed run restarts mid-trajectory from a checkpoint and
+matches the uninterrupted run bitwise.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import json
 import math
-from typing import Iterator, Optional, Sequence
+from typing import Iterator, Optional, Sequence, Union
 
 import numpy as np
 
@@ -58,12 +74,29 @@ from repro.core.adjacency import network_matrix
 from repro.core.bounds import exact_phi_ell, phi_ell_bound_from_stats, \
     psi_total
 from repro.core.metrics import count_d2d_transmissions
+from repro.topology import TopologySpec
 
 __all__ = ["ALGORITHMS", "PlanRow", "RoundPlan", "plan_rows"]
 
 ALGORITHMS = ("semidec", "fedavg", "colrel")
 
-_JSON_VERSION = 1
+_JSON_VERSION = 2
+_JSON_SUPPORTED = (1, 2)     # v1: pre-topology plans (no embedded spec)
+
+
+def _sample_snapshot(network, rng, t):
+    """``network.sample(rng, t)`` when the sampler is time-aware (the
+    ``TopologyModel`` protocol), ``network.sample(rng)`` for legacy
+    custom networks."""
+    sample = network.sample
+    try:
+        params = inspect.signature(sample).parameters
+    except (TypeError, ValueError):   # pragma: no cover - builtins etc.
+        params = {}
+    if "t" in params or any(p.kind is inspect.Parameter.VAR_POSITIONAL
+                            for p in params.values()):
+        return sample(rng, t)
+    return sample(rng)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,7 +144,7 @@ def plan_rows(network, config, algorithm: str = "semidec",
     while True:
         uses_d2d = algorithm in ("semidec", "colrel")
         if uses_d2d:
-            clusters = network.sample(rng)
+            clusters = _sample_snapshot(network, rng, t)
             A = network_matrix(clusters, n)
             d2d = sum(count_d2d_transmissions(c.W) for c in clusters)
         else:
@@ -167,6 +200,10 @@ class RoundPlan:
     d2s_t: np.ndarray          # (K,)      int64
     d2d_t: np.ndarray          # (K,)      int64
     psi_bound_t: np.ndarray    # (K,)      float64
+    # -- provenance: who generated these columns, and from where --------
+    topology: Optional[TopologySpec] = None   # embedded topology spec
+    seed: Optional[int] = None     # planning seed (None: external rng)
+    t0: int = 0                    # global index of row 0 (plan slices)
 
     def __post_init__(self):
         K, n = self.A_t.shape[0], self.A_t.shape[-1]
@@ -184,6 +221,8 @@ class RoundPlan:
                     f"{name} must be ({K},), got {getattr(self, name).shape}")
         if self.algorithm not in ALGORITHMS:
             raise ValueError(f"algorithm must be one of {ALGORITHMS}")
+        if self.t0 < 0:
+            raise ValueError(f"t0 must be >= 0, got {self.t0}")
 
     # -- shape / content views ---------------------------------------------
 
@@ -203,11 +242,53 @@ class RoundPlan:
         pre-plan runtime by construction."""
         return bool((self.active_t != 1.0).any())
 
+    # -- round access / slicing --------------------------------------------
+
+    def __len__(self) -> int:
+        return self.n_rounds
+
+    def __getitem__(self, idx: Union[int, slice]
+                    ) -> Union[PlanRow, "RoundPlan"]:
+        """``plan[t]`` -> that round's ``PlanRow`` (``t`` local to this
+        plan); ``plan[t0:]`` -> the tail sub-plan: columns + bookkeeping
+        sliced verbatim (nothing renumbered or renormalized), with
+        ``t0`` advanced so History round indices stay global.  Resuming
+        a crashed run is ``engine.execute(plan[t0:], restored_params,
+        batches[t0:])`` -- bitwise-identical to the uninterrupted run.
+        """
+        if isinstance(idx, slice):
+            start, stop, step = idx.indices(self.n_rounds)
+            if step != 1:
+                raise ValueError(f"plan slices must have step 1, got {step}")
+            stop = max(stop, start)
+            sl = slice(start, stop)
+            return dataclasses.replace(
+                self, A_t=self.A_t[sl], tau_t=self.tau_t[sl],
+                m_t=self.m_t[sl], eta_t=self.eta_t[sl],
+                active_t=self.active_t[sl],
+                m_planned_t=self.m_planned_t[sl],
+                m_actual_t=self.m_actual_t[sl], d2s_t=self.d2s_t[sl],
+                d2d_t=self.d2d_t[sl], psi_bound_t=self.psi_bound_t[sl],
+                t0=self.t0 + start)
+        t = int(idx)
+        if t < 0:
+            t += self.n_rounds
+        if not 0 <= t < self.n_rounds:
+            raise IndexError(f"round {idx} out of range for "
+                             f"{self.n_rounds}-round plan")
+        return PlanRow(
+            t=self.t0 + t, A=self.A_t[t], tau=self.tau_t[t],
+            m=float(self.m_t[t]), eta=float(self.eta_t[t]),
+            active=self.active_t[t], m_planned=int(self.m_planned_t[t]),
+            m_actual=int(self.m_actual_t[t]), d2s=int(self.d2s_t[t]),
+            d2d=int(self.d2d_t[t]), psi_bound=float(self.psi_bound_t[t]))
+
     # -- constructors -------------------------------------------------------
 
     @classmethod
-    def from_rows(cls, rows: Sequence[PlanRow],
-                  algorithm: str = "semidec") -> "RoundPlan":
+    def from_rows(cls, rows: Sequence[PlanRow], algorithm: str = "semidec",
+                  topology: Optional[TopologySpec] = None,
+                  seed: Optional[int] = None) -> "RoundPlan":
         """Stack explicit per-round rows into a plan (any trajectory)."""
         if not rows:
             raise ValueError("from_rows: need at least one round")
@@ -224,14 +305,22 @@ class RoundPlan:
             d2s_t=np.asarray([r.d2s for r in rows], np.int64),
             d2d_t=np.asarray([r.d2d for r in rows], np.int64),
             psi_bound_t=np.asarray([r.psi_bound for r in rows], np.float64),
+            topology=topology, seed=seed,
         )
 
     @classmethod
     def _planned(cls, network, config, algorithm,
                  rng: Optional[np.random.Generator]) -> "RoundPlan":
+        # provenance: the spec always rides along when the network has
+        # one; the seed only when planning owned the rng stream (an
+        # external generator may have unknown prior state, so the plan
+        # is then replayable but not regenerable)
+        spec = getattr(network, "spec", None)
+        spec = spec if isinstance(spec, TopologySpec) else None
+        seed = int(config.seed) if rng is None else None
         gen = plan_rows(network, config, algorithm, rng)
         return cls.from_rows([next(gen) for _ in range(config.t_max)],
-                             algorithm=algorithm)
+                             algorithm=algorithm, topology=spec, seed=seed)
 
     @classmethod
     def connectivity_aware(cls, network, config,
@@ -302,18 +391,130 @@ class RoundPlan:
         mask = (rng.random(self.tau_t.shape) >= rate).astype(np.float32)
         return self.with_active(mask)
 
+    def with_markov_dropout(self, p_fail: float, p_recover: float,
+                            rng: Optional[np.random.Generator] = None
+                            ) -> "RoundPlan":
+        """Bursty (temporally-correlated) stragglers: each client is an
+        independent two-state Markov chain, failing with probability
+        ``p_fail`` per round and recovering with probability
+        ``p_recover`` -- mean outage length ``1/p_recover`` rounds, vs
+        the memoryless single-round outages of ``with_dropout``.  The
+        chain starts from its stationary distribution (long-run active
+        fraction ``p_recover / (p_fail + p_recover)``), so the marginal
+        dropout rate is constant from round 0.  ``p_fail = 0`` is
+        bitwise-identical to full participation.
+        """
+        for name, p in (("p_fail", p_fail), ("p_recover", p_recover)):
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"need 0 <= {name} <= 1, got {p}")
+        if rng is None:
+            rng = np.random.default_rng(0)
+        K, n = self.tau_t.shape
+        pi_active = (p_recover / (p_fail + p_recover)
+                     if p_fail + p_recover > 0 else 1.0)
+        state = rng.random(n) < pi_active
+        mask = np.empty((K, n), np.float32)
+        for t in range(K):
+            mask[t] = state
+            u = rng.random(n)
+            state = np.where(state, u >= p_fail, u < p_recover)
+        return self.with_active(mask)
+
+    def with_cluster_dropout(self, rate: float,
+                             rng: Optional[np.random.Generator] = None,
+                             partition: Optional[Sequence[np.ndarray]] = None
+                             ) -> "RoundPlan":
+        """Whole-cluster outages: each cluster independently drops *all*
+        of its clients with probability ``rate`` per round (an access
+        point or relay going dark -- spatially-correlated failures the
+        i.i.d. model can't express).  ``partition`` defaults to the
+        embedded topology spec's t=0 membership (re-clustering schemes
+        keep their base partition).
+        """
+        if not 0.0 <= rate < 1.0:
+            raise ValueError(f"need 0 <= rate < 1, got {rate}")
+        if partition is None:
+            if self.topology is None:
+                raise ValueError(
+                    "with_cluster_dropout needs a partition: pass one "
+                    "explicitly or use a plan with an embedded topology "
+                    "spec")
+            partition = self.topology.build().partition
+        if rng is None:
+            rng = np.random.default_rng(0)
+        mask = np.ones(self.tau_t.shape, np.float32)
+        for t in range(self.n_rounds):
+            for verts in partition:
+                if rng.random() < rate:
+                    mask[t, np.asarray(verts)] = 0.0
+        return self.with_active(mask)
+
+    # -- regeneration from provenance ---------------------------------------
+
+    def regenerate(self) -> "RoundPlan":
+        """Rebuild every column from the embedded topology spec.
+
+        Replays the planning rng stream (``topology.sample`` then
+        ``sample_clients`` per round, using the recorded per-round
+        ``m_planned_t``), so the result is bitwise-identical to the
+        original plan -- the plan JSON is a *generator* of its own
+        trajectory, not only a recording.  Requires provenance: an
+        embedded spec and a planning seed (and an unsliced plan, since a
+        slice's rng offset is not recoverable).
+        """
+        if self.topology is None or self.seed is None:
+            raise ValueError(
+                "plan carries no regenerable provenance (topology spec + "
+                "seed); plans built from an external rng or raw rows can "
+                "only be replayed")
+        if self.t0 != 0:
+            raise ValueError("sliced plans cannot be regenerated; "
+                             "regenerate the full plan and re-slice")
+        model = self.topology.build()
+        n = self.n_clients
+        rng = np.random.default_rng(self.seed)
+        uses_d2d = self.algorithm in ("semidec", "colrel")
+        rows = []
+        for t in range(self.n_rounds):
+            if uses_d2d:
+                clusters = model.sample(rng, t)
+                A = network_matrix(clusters, n)
+                d2d = sum(count_d2d_transmissions(c.W) for c in clusters)
+                vertex_sets = [c.vertices for c in clusters]
+            else:
+                A, d2d = np.eye(n), 0
+                vertex_sets = model.partition
+            m = int(self.m_planned_t[t])
+            tau, m_actual = sampling.sample_clients(rng, vertex_sets, m, n)
+            rows.append(PlanRow(
+                t=t, A=np.asarray(A, np.float32),
+                tau=np.asarray(tau, np.float32), m=float(m_actual),
+                eta=float(self.eta_t[t]), active=np.ones(n, np.float32),
+                m_planned=m, m_actual=int(m_actual), d2s=int(m_actual),
+                d2d=int(d2d), psi_bound=float(self.psi_bound_t[t])))
+        base = RoundPlan.from_rows(rows, self.algorithm,
+                                   topology=self.topology, seed=self.seed)
+        return base.with_active(self.active_t) if self.has_dropout else base
+
     # -- serialization ------------------------------------------------------
 
     def to_json(self) -> str:
         """Serialize the full trajectory.  Exact: every column round-trips
         bit-for-bit through ``from_json`` (f32/f64 values survive JSON's
         shortest-repr doubles), so an executed plan is a pinned artifact.
+        The embedded topology spec + seed make it a regenerable one:
+        ``RoundPlan.from_json(text).regenerate()`` rebuilds the columns
+        from the generative model instead of reading the recording.
         """
         payload = {
             "version": _JSON_VERSION,
             "algorithm": self.algorithm,
             "n_rounds": self.n_rounds,
             "n_clients": self.n_clients,
+            "topology": (None if self.topology is None
+                         else self.topology.as_dict()),
+            "seed": self.seed,
+            "t0": self.t0,
             "A_t": self.A_t.tolist(),
             "tau_t": self.tau_t.tolist(),
             "m_t": self.m_t.tolist(),
@@ -331,11 +532,16 @@ class RoundPlan:
     @classmethod
     def from_json(cls, text: str) -> "RoundPlan":
         d = json.loads(text)
-        if d.get("version") != _JSON_VERSION:
+        if d.get("version") not in _JSON_SUPPORTED:
             raise ValueError(
                 f"unsupported RoundPlan version {d.get('version')!r} "
-                f"(expected {_JSON_VERSION})")
+                f"(supported: {_JSON_SUPPORTED})")
+        spec = d.get("topology")
         return cls(
+            topology=(None if spec is None
+                      else TopologySpec.from_dict(spec)),
+            seed=d.get("seed"),
+            t0=int(d.get("t0", 0)),
             algorithm=d["algorithm"],
             A_t=np.asarray(d["A_t"], np.float32),
             tau_t=np.asarray(d["tau_t"], np.float32),

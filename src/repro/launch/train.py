@@ -11,9 +11,20 @@ synthetic MNIST-shaped dataset, T=5 local SGD steps.
 
 Runtime selection is one ``ExecutionConfig`` (``--backend``, ``--scan``);
 trajectories are first-class ``RoundPlan`` artifacts: ``--plan-out``
-saves the executed plan as JSON, ``--plan`` replays a saved one
-verbatim, and ``--dropout RATE`` adds per-round client stragglers as a
-plan column (partial participation inside a cluster).
+saves the executed plan as JSON (embedding its topology spec, so the
+trajectory can be *regenerated*, not just replayed), ``--plan`` replays
+a saved one verbatim, and ``--dropout RATE`` adds per-round client
+stragglers as a plan column (``--dropout-kind markov|cluster`` for
+bursty / whole-cluster outages).
+
+The D2D topology is declarative (``repro.topology``): pick any
+registered family with ``--topology family:key=val,...``, e.g.
+
+  --topology geometric:radius=0.3,speed=0.05
+  --topology k_regular:k_range=6-9,p_fail=0.1,membership=skewed
+  --topology hub:hubs=2,recluster_every=5
+
+Default: the paper's k-regular model built from --k-min/--k-max/--p.
 """
 
 from __future__ import annotations
@@ -27,7 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graphs import D2DNetwork
+from repro import topology
 from repro.core.server import FederatedServer, ServerConfig
 from repro.data import (FederatedBatcher, label_sorted_partition,
                         make_classification)
@@ -77,9 +88,22 @@ def main(argv=None) -> int:
     ap.add_argument("--scan", action="store_true",
                     help="compile the whole trajectory into one "
                          "lax.scan dispatch")
+    ap.add_argument("--topology", default="",
+                    help="declarative topology spec 'family:key=val,...' "
+                         f"(families: {', '.join(topology.families())}); "
+                         "default: the paper's k_regular model from "
+                         "--k-min/--k-max/--p")
     ap.add_argument("--dropout", type=float, default=0.0,
                     help="per-round client straggler probability "
                          "(adds an active_t column to the plan)")
+    ap.add_argument("--dropout-kind", default="iid",
+                    choices=("iid", "markov", "cluster"),
+                    help="straggler model: i.i.d. per round, bursty "
+                         "two-state Markov chains, or whole-cluster "
+                         "outages")
+    ap.add_argument("--dropout-recover", type=float, default=0.5,
+                    help="markov dropout: per-round recovery probability "
+                         "(mean outage = 1/recover rounds)")
     ap.add_argument("--plan", default="",
                     help="replay a saved RoundPlan JSON instead of "
                          "planning here")
@@ -108,9 +132,14 @@ def main(argv=None) -> int:
         return {"test_acc": cnn_lib.accuracy(apply_fn, p, xs, ys),
                 "test_loss": float(loss_fn(p, (xs, ys)))}
 
-    network = D2DNetwork(n=args.n, c=args.clusters,
-                         k_range=(args.k_min, args.k_max),
-                         p_fail=args.p)
+    if args.topology:
+        spec = topology.parse_spec(args.topology, n=args.n,
+                                   c=args.clusters)
+    else:
+        spec = topology.make_spec("k_regular", n=args.n, c=args.clusters,
+                                  k_range=(args.k_min, args.k_max),
+                                  p_fail=args.p)
+    network = spec.build()
     cfg = ServerConfig(
         T=args.T, t_max=args.rounds, phi_max=args.phi_max,
         m_fixed=args.m, seed=args.seed,
@@ -126,8 +155,20 @@ def main(argv=None) -> int:
             plan = {"semidec": RoundPlan.connectivity_aware,
                     "fedavg": RoundPlan.fedavg,
                     "colrel": RoundPlan.colrel}[args.algorithm](*gen_args)
-        plan = plan.with_dropout(args.dropout,
-                                 np.random.default_rng(args.seed + 1))
+        drop_rng = np.random.default_rng(args.seed + 1)
+        if args.dropout_kind == "markov":
+            # --dropout is the *marginal* straggler rate for every kind:
+            # the stationary chain with recovery p_rec drops a
+            # p_fail/(p_fail+p_rec) fraction, so invert for p_fail
+            p_rec = args.dropout_recover
+            p_fail = min(args.dropout / max(1.0 - args.dropout, 1e-9)
+                         * p_rec, 1.0)
+            plan = plan.with_markov_dropout(p_fail, p_rec, drop_rng)
+        elif args.dropout_kind == "cluster":
+            plan = plan.with_cluster_dropout(args.dropout, drop_rng,
+                                             partition=network.partition)
+        else:
+            plan = plan.with_dropout(args.dropout, drop_rng)
     history = server.run(eval_fn=eval_fn, plan=plan)
     if args.plan_out:
         server.last_plan.save(args.plan_out)

@@ -1,0 +1,40 @@
+"""Declarative topology API: pluggable time-varying D2D graph families.
+
+The graph generator is a first-class, serializable object: a
+``TopologySpec`` (family name + parameters + cluster-membership scheme)
+builds a ``TopologyModel`` whose ``sample(rng, t)`` draws one
+``List[ClusterGraph]`` snapshot per round -- i.i.d. *or* time-correlated
+(mobility, periodic re-clustering).  Specs round-trip through JSON
+exactly and ride inside ``RoundPlan`` artifacts as topology provenance,
+so a plan can be *regenerated from spec* (same seed => identical
+``A_t`` columns), not just replayed.
+
+Registered families (see ``repro.topology.families`` for regimes):
+``k_regular`` (the paper's Sec. 6.1.1 model; bitwise-compatible with the
+legacy ``D2DNetwork``), ``erdos_renyi``, ``geometric`` (time-correlated
+random-waypoint mobility), ``ring``, ``small_world``, ``hub``.
+
+    spec  = topology.make_spec("geometric", n=70, c=7, radius=0.3)
+    model = spec.build()
+    plan  = RoundPlan.connectivity_aware(model, cfg)   # spec embedded
+    plan.regenerate()                                  # bitwise == plan
+
+CLI syntax: ``topology.parse_spec("k_regular:k_range=6-9,p_fail=0.1",
+n=70, c=7)`` (see ``repro.launch.train --topology``).
+"""
+
+from .families import (ErdosRenyi, Geometric, Hub, KRegular, Ring,
+                       SmallWorld)
+# imported after .families so the registry *function* ``families`` wins
+# over the submodule attribute of the same name
+from .base import (MEMBERSHIPS, ClusteredTopology, TopologyModel,
+                   TopologySpec, build, families, family_defaults,
+                   from_json, make_partition, make_spec, parse_spec,
+                   register)
+
+__all__ = [
+    "MEMBERSHIPS", "ClusteredTopology", "TopologyModel", "TopologySpec",
+    "build", "families", "family_defaults", "from_json", "make_partition",
+    "make_spec", "parse_spec", "register",
+    "KRegular", "ErdosRenyi", "Geometric", "Ring", "SmallWorld", "Hub",
+]

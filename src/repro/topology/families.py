@@ -1,0 +1,194 @@
+"""Registered time-varying graph families.
+
+Every family produces per-cluster binary adjacency matrices with
+positive out-degrees (required by the equal-neighbor matrix, Fact 1) and
+self-loops by default (a client keeps a share of its own gradient,
+eq. 2).  Degree-stat regimes -- what each family exercises in the
+Sec. 5 bound machinery:
+
+    family       regime
+    -----------  -------------------------------------------------------
+    k_regular    the paper's Sec. 6.1.1 model: eps = 0 before deletion,
+                 Prop. 5.1 territory (alpha = k/s, in == out degrees)
+    erdos_renyi  i.i.d. directed G(s, p): binomial degree spread, alpha
+                 typically < 1/2 -> the conservative fallback bound
+    geometric    unit-square disk graphs with random-waypoint mobility:
+                 *time-correlated* G(t) (consecutive snapshots share
+                 most edges), spatially clustered degrees
+    ring         sparse deterministic worst case: out-degree hops+1,
+                 alpha ~ 2/s -> psi near its maximum, m(t) -> n
+    small_world  ring lattice + Watts-Strogatz rewiring: interpolates
+                 ring -> random as beta goes 0 -> 1
+    hub          star-like: spokes touch only the hub(s); d_in(hub) ~ s
+                 (varphi ~ s/2), the D2S-degenerate extreme
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core.graphs import (delete_edge_fraction, ensure_positive_out_degree,
+                               k_regular_digraph)
+
+from .base import ClusteredTopology, register
+
+__all__ = ["KRegular", "ErdosRenyi", "Geometric", "Ring", "SmallWorld",
+           "Hub"]
+
+
+@register("k_regular")
+class KRegular(ClusteredTopology):
+    """The paper's generative model (Sec. 6.1.1): per cluster, a random
+    k-regular digraph with ``k`` uniform on ``k_range`` (inclusive),
+    then i.i.d. deletion of a fraction ``p_fail`` of edges.
+
+    Bitwise-reproduces the legacy ``D2DNetwork.sample`` rng stream: the
+    per-cluster draw order (k, permutation digraph, edge deletion) is
+    unchanged, so pre-redesign trajectories regenerate identically.
+    """
+
+    DEFAULTS: Dict = {"k_range": (6, 7, 8, 9), "p_fail": 0.1,
+                      "self_loops": True}
+
+    def _cluster_W(self, rng, t, verts):
+        p = self._params
+        s = len(verts)
+        k_range = p["k_range"]
+        k = int(rng.integers(min(k_range), max(k_range) + 1))
+        k = min(k, s)
+        W = k_regular_digraph(s, k, rng, self_loops=bool(p["self_loops"]))
+        if p["p_fail"] > 0:
+            W = delete_edge_fraction(W, float(p["p_fail"]), rng)
+        return W
+
+
+@register("erdos_renyi")
+class ErdosRenyi(ClusteredTopology):
+    """Directed G(s, p) per cluster: each off-diagonal edge present
+    independently with probability ``p_edge``."""
+
+    DEFAULTS: Dict = {"p_edge": 0.5, "self_loops": True}
+
+    def _cluster_W(self, rng, t, verts):
+        p = self._params
+        s = len(verts)
+        W = (rng.random((s, s)) < float(p["p_edge"])).astype(np.int8)
+        np.fill_diagonal(W, 1 if p["self_loops"] else 0)
+        return ensure_positive_out_degree(W)
+
+
+@register("geometric")
+class Geometric(ClusteredTopology):
+    """Random geometric graphs on the unit square under random-waypoint
+    mobility: client ``i`` links to ``j`` iff ``||pos_i - pos_j|| <=
+    radius`` (plus self-loops).  Positions persist across rounds and
+    move ``speed`` per round toward a waypoint (redrawn on arrival), so
+    consecutive snapshots are genuinely *time-correlated* -- unlike
+    every i.i.d. family, G(t+1) shares most of G(t)'s edges.
+
+    rng consumption per round is shape-only (one (n,2) uniform per
+    advance regardless of arrivals), so a seeded stream regenerates the
+    trajectory exactly.
+    """
+
+    DEFAULTS: Dict = {"radius": 0.35, "speed": 0.08, "self_loops": True}
+    time_correlated = True
+
+    def _reset(self, rng):
+        self._pos = rng.random((self.n, 2))
+        self._way = rng.random((self.n, 2))
+
+    def _advance(self, rng, t):
+        speed = float(self._params["speed"])
+        step = self._way - self._pos
+        dist = np.linalg.norm(step, axis=1)
+        arrived = dist <= speed
+        scale = np.where(arrived, 1.0, speed / np.maximum(dist, 1e-12))
+        self._pos = self._pos + step * scale[:, None]
+        fresh = rng.random((self.n, 2))    # fixed-shape draw every round
+        self._way = np.where(arrived[:, None], fresh, self._way)
+
+    def _cluster_W(self, rng, t, verts):
+        p = self._params
+        pos = self._pos[verts]
+        d = np.linalg.norm(pos[:, None, :] - pos[None, :, :], axis=-1)
+        W = (d <= float(p["radius"])).astype(np.int8)
+        np.fill_diagonal(W, 1 if p["self_loops"] else 0)
+        return ensure_positive_out_degree(W)
+
+
+@register("ring")
+class Ring(ClusteredTopology):
+    """Deterministic directed ring: ``i -> i+1, ..., i+hops`` (mod s)
+    plus self-loops.  The sparse worst case for the psi bounds: alpha ~
+    (hops+1)/s, so the m(t) rule is pushed toward full participation."""
+
+    DEFAULTS: Dict = {"hops": 1, "self_loops": True}
+
+    def _cluster_W(self, rng, t, verts):
+        p = self._params
+        s = len(verts)
+        hops = max(1, int(p["hops"]))
+        W = np.zeros((s, s), dtype=np.int8)
+        idx = np.arange(s)
+        for h in range(1, min(hops, max(s - 1, 1)) + 1):
+            W[idx, (idx + h) % s] = 1
+        if p["self_loops"] or s == 1:
+            np.fill_diagonal(W, 1)
+        return ensure_positive_out_degree(W)
+
+
+@register("small_world")
+class SmallWorld(ClusteredTopology):
+    """Watts-Strogatz-style: a ``hops``-neighbor ring lattice whose
+    non-self edges each rewire to a uniform random target with
+    probability ``beta`` (collisions keep the original edge).  beta=0 is
+    the ring; beta=1 approaches a sparse random digraph."""
+
+    DEFAULTS: Dict = {"hops": 2, "beta": 0.2, "self_loops": True}
+
+    def _cluster_W(self, rng, t, verts):
+        p = self._params
+        s = len(verts)
+        hops = max(1, int(p["hops"]))
+        beta = float(p["beta"])
+        W = np.zeros((s, s), dtype=np.int8)
+        idx = np.arange(s)
+        for h in range(1, min(hops, max(s - 1, 1)) + 1):
+            W[idx, (idx + h) % s] = 1
+        if beta > 0 and s > 2:
+            rows, cols = np.nonzero(W)
+            for i, j in zip(rows, cols):
+                if rng.random() >= beta:
+                    continue
+                jn = int(rng.integers(s))
+                if jn != i and jn != int(j) and not W[i, jn]:
+                    W[i, j] = 0
+                    W[i, jn] = 1
+        if p["self_loops"] or s == 1:
+            np.fill_diagonal(W, 1)
+        return ensure_positive_out_degree(W)
+
+
+@register("hub")
+class Hub(ClusteredTopology):
+    """Star-like intra-cluster graph: the first ``hubs`` clients of each
+    cluster are hubs, linked to every spoke in both directions (hubs
+    also interlink); spokes touch only hubs (+ their self-loop).  The
+    D2S-degenerate extreme: d_in(hub) ~ s makes varphi ~ s/hubs, so the
+    degree-only bounds blow up and m(t) collapses to ~n even though the
+    exact phi can be moderate."""
+
+    DEFAULTS: Dict = {"hubs": 1, "self_loops": True}
+
+    def _cluster_W(self, rng, t, verts):
+        p = self._params
+        s = len(verts)
+        h = max(1, min(int(p["hubs"]), s))
+        W = np.zeros((s, s), dtype=np.int8)
+        W[:, :h] = 1                        # everyone transmits to hubs
+        W[:h, :] = 1                        # hubs transmit to everyone
+        np.fill_diagonal(W, 1 if p["self_loops"] else 0)
+        return ensure_positive_out_degree(W)

@@ -1,0 +1,240 @@
+"""Round-resumable plans + correlated straggler models (ISSUE 5
+satellites).
+
+Covers: ``RoundPlan.__getitem__`` (int -> PlanRow, slice -> sub-plan
+with preserved columns/bookkeeping and a shifted ``t0``), crash/resume
+through ``ckpt.checkpoint`` matching the uninterrupted History bitwise,
+and the correlated dropout transforms (``with_markov_dropout`` bursty
+chains, ``with_cluster_dropout`` whole-cluster outages) renormalizing
+exactly like ``with_active``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import topology
+from repro.ckpt import load_checkpoint, save_checkpoint
+from repro.core.graphs import D2DNetwork
+from repro.core.server import ServerConfig
+from repro.fl import ExecutionConfig, PlanRow, RoundPlan, make_engine
+
+
+def quad_loss(params, batch):
+    x = params["x"]
+    b, = batch
+    return 0.5 * jnp.sum((x - b.mean(axis=0)) ** 2)
+
+
+def _plan(t_max=6, seed=3, n=12, c=2):
+    net = D2DNetwork(n=n, c=c, k_range=(4, 6), p_fail=0.1)
+    cfg = ServerConfig(T=2, t_max=t_max, phi_max=0.3, seed=seed,
+                       eta=lambda t: 0.2 / (1 + 0.3 * t))
+    return RoundPlan.connectivity_aware(net, cfg)
+
+
+def _batches(n, rounds, p=4, T=2, B=2, seed=1):
+    rng = np.random.default_rng(seed)
+    targets = rng.standard_normal((n, p)).astype(np.float32)
+    out = []
+    for _ in range(rounds):
+        samp = targets[:, None, None, :] \
+            + 0.05 * rng.standard_normal((n, T, B, p))
+        out.append((jnp.asarray(samp, jnp.float32),))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# __getitem__: rows and slices
+# ---------------------------------------------------------------------------
+
+def test_getitem_int_returns_plan_row():
+    plan = _plan()
+    row = plan[2]
+    assert isinstance(row, PlanRow)
+    assert row.t == 2 and row.m_planned == int(plan.m_planned_t[2])
+    np.testing.assert_array_equal(row.A, plan.A_t[2])
+    np.testing.assert_array_equal(row.tau, plan.tau_t[2])
+    assert plan[-1].t == plan.n_rounds - 1
+    assert len(plan) == plan.n_rounds
+    with pytest.raises(IndexError):
+        plan[plan.n_rounds]
+
+
+def test_slice_preserves_columns_and_bookkeeping():
+    plan = _plan(t_max=6)
+    tail = plan[2:]
+    assert tail.n_rounds == 4 and tail.t0 == 2
+    assert tail.algorithm == plan.algorithm
+    assert tail.topology == plan.topology     # provenance rides along
+    for f in ("A_t", "tau_t", "m_t", "eta_t", "active_t", "m_planned_t",
+              "m_actual_t", "d2s_t", "d2d_t"):
+        np.testing.assert_array_equal(getattr(tail, f),
+                                      getattr(plan, f)[2:])
+    np.testing.assert_array_equal(tail.psi_bound_t, plan.psi_bound_t[2:])
+    # nested slices compose the offset
+    assert plan[2:][1:].t0 == 3
+    # full slice is the identity (t0 = 0)
+    assert plan[:].allclose(plan) and plan[:].t0 == 0
+    with pytest.raises(ValueError, match="step"):
+        plan[::2]
+    with pytest.raises(ValueError, match="regenerate"):
+        plan[1:].regenerate()
+
+
+def test_slice_rows_carry_global_round_index():
+    plan = _plan(t_max=5)
+    assert plan[3:][0].t == 3                 # PlanRow.t is global
+
+
+# ---------------------------------------------------------------------------
+# crash/resume: ckpt.checkpoint + plan[t0:] == uninterrupted, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scan", [False, True])
+def test_resume_from_checkpoint_matches_uninterrupted_bitwise(tmp_path,
+                                                              scan):
+    K, t0, n = 6, 3, 12
+    plan = _plan(t_max=K).with_dropout(0.2, np.random.default_rng(7))
+    batches = _batches(n, K)
+    params0 = {"x": jnp.zeros(4)}
+
+    def eval_fn(p):
+        return {"l2": float(jnp.sum(p["x"] ** 2))}
+
+    def engine():
+        return make_engine(ExecutionConfig(backend="einsum", scan=scan),
+                           quad_loss)
+
+    # the uninterrupted run
+    params_full, hist_full = engine().execute(plan, params0, batches,
+                                              eval_fn=eval_fn)
+
+    # the "crashed" run: execute the head, checkpoint, restore, resume
+    params_head, hist_head = engine().execute(plan[:t0], params0,
+                                              batches[:t0],
+                                              eval_fn=eval_fn)
+    path = save_checkpoint(str(tmp_path), t0, params_head,
+                           meta={"t0": t0})
+    restored, meta = load_checkpoint(path, like=params0)
+    assert meta["meta"]["t0"] == t0
+    params_res, hist_res = engine().execute(plan[t0:], restored,
+                                            batches[t0:], eval_fn=eval_fn)
+
+    np.testing.assert_array_equal(np.asarray(params_full["x"]),
+                                  np.asarray(params_res["x"]))
+    # stitched History == uninterrupted History (records carry global t)
+    stitched = hist_head.records + hist_res.records
+    assert [r.t for r in stitched] == [r.t for r in hist_full.records]
+    for a, b in zip(stitched, hist_full.records):
+        assert (a.m, a.m_actual, a.d2s, a.d2d, a.eta, a.psi_bound) == \
+            (b.m, b.m_actual, b.d2s, b.d2d, b.eta, b.psi_bound)
+        assert a.metrics == b.metrics
+    # the ledgers stitch too
+    np.testing.assert_array_equal(
+        np.concatenate([hist_head.ledger.cumulative_cost(),
+                        hist_head.ledger.cumulative_cost()[-1]
+                        + hist_res.ledger.cumulative_cost()]),
+        hist_full.ledger.cumulative_cost())
+
+
+# ---------------------------------------------------------------------------
+# correlated straggler models
+# ---------------------------------------------------------------------------
+
+def test_markov_dropout_renormalizes_like_with_active():
+    plan = _plan()
+    rng_mask = np.random.default_rng(5)
+    dropped = plan.with_markov_dropout(0.3, 0.5, rng_mask)
+    assert dropped.has_dropout
+    # identical to routing the same mask through with_active
+    want = plan.with_active(dropped.active_t)
+    assert dropped.allclose(want)
+    eff = (plan.tau_t * dropped.active_t).sum(axis=1)
+    np.testing.assert_array_equal(dropped.m_actual_t, eff.astype(np.int64))
+    np.testing.assert_array_equal(dropped.m_t, np.maximum(eff, 1.0))
+
+
+def test_markov_dropout_zero_fail_is_noop_and_validates():
+    plan = _plan()
+    assert plan.with_markov_dropout(0.0, 0.5).allclose(plan)
+    with pytest.raises(ValueError, match="p_fail"):
+        plan.with_markov_dropout(1.5, 0.5)
+    with pytest.raises(ValueError, match="p_recover"):
+        plan.with_markov_dropout(0.5, -0.1)
+
+
+def test_markov_dropout_is_bursty():
+    """Same marginal dropout rate, very different temporal structure:
+    the chain's outages must persist (mean run length ~ 1/p_recover)
+    while iid outages last ~1 round."""
+    plan = _plan(t_max=60)
+    rate, p_rec = 0.3, 0.2
+    p_fail = rate / (1 - rate) * p_rec        # stationary marginal = rate
+    mk = plan.with_markov_dropout(p_fail, p_rec, np.random.default_rng(0))
+    iid = plan.with_dropout(rate, np.random.default_rng(0))
+
+    def mean_outage_run(active_t):
+        runs = []
+        for i in range(active_t.shape[1]):
+            run = 0
+            for v in active_t[:, i]:
+                if v == 0:
+                    run += 1
+                elif run:
+                    runs.append(run)
+                    run = 0
+            if run:
+                runs.append(run)
+        return np.mean(runs) if runs else 0.0
+
+    # comparable marginal dropout...
+    assert abs((1 - mk.active_t).mean() - (1 - iid.active_t).mean()) < 0.1
+    # ...but much longer outages (expected ~1/p_rec = 5 vs ~1.4 for iid)
+    assert mean_outage_run(mk.active_t) > 2 * mean_outage_run(iid.active_t)
+
+
+def test_cluster_dropout_is_cluster_constant_and_renormalized():
+    spec = topology.make_spec("erdos_renyi", n=12, c=3)
+    plan = RoundPlan.connectivity_aware(
+        spec.build(), ServerConfig(T=2, t_max=8, phi_max=0.3, seed=0))
+    dropped = plan.with_cluster_dropout(0.4, np.random.default_rng(3))
+    assert dropped.has_dropout
+    partition = spec.build().partition
+    for t in range(dropped.n_rounds):
+        for verts in partition:
+            vals = set(dropped.active_t[t, verts].tolist())
+            assert len(vals) == 1        # whole cluster up or down
+    assert dropped.allclose(plan.with_active(dropped.active_t))
+    # explicit partition overrides the embedded spec
+    explicit = plan.with_cluster_dropout(
+        0.4, np.random.default_rng(3), partition=partition)
+    assert explicit.allclose(dropped)
+    with pytest.raises(ValueError, match="rate"):
+        plan.with_cluster_dropout(1.0)
+
+
+def test_cluster_dropout_without_partition_or_spec_raises():
+    rows = [PlanRow(t=t, A=np.eye(4, dtype=np.float32),
+                    tau=np.ones(4, np.float32), m=4.0, eta=0.1,
+                    active=np.ones(4, np.float32), m_planned=4,
+                    m_actual=4, d2s=4, d2d=0, psi_bound=float("nan"))
+            for t in range(2)]
+    bare = RoundPlan.from_rows(rows, "fedavg")
+    with pytest.raises(ValueError, match="partition"):
+        bare.with_cluster_dropout(0.3)
+
+
+def test_correlated_dropout_executes_and_costs_less():
+    """A Markov-dropout plan runs end-to-end and its ledger reflects the
+    reduced uploads."""
+    n, K = 12, 5
+    plan = _plan(t_max=K, n=n).with_markov_dropout(
+        0.4, 0.5, np.random.default_rng(1))
+    engine = make_engine(ExecutionConfig(backend="aggregate"), quad_loss)
+    params, hist = engine.execute(plan, {"x": jnp.zeros(4)},
+                                  _batches(n, K))
+    assert np.isfinite(np.asarray(params["x"])).all()
+    assert [r.d2s for r in hist.records] == plan.d2s_t.tolist()
+    dense = _plan(t_max=K, n=n)
+    assert hist.ledger.total_d2s <= int(dense.tau_t.sum())

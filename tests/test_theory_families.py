@@ -1,0 +1,126 @@
+"""Theory layer across topology families (ISSUE 5 satellite).
+
+For EVERY registered ``repro.topology`` family: the server's degree-only
+bound ``phi_ell_bound_from_stats`` dominates the oracle ``exact_phi_ell``
+(with the documented O(eps^2) slack of Prop. 5.1's truncation), and the
+``min_clients`` threshold rule stays monotone in ``phi_max``.
+Hypothesis-driven where available (tests/hypothesis_compat.py) with a
+seeded parametrized fallback that always runs -- the same pattern as
+tests/test_core_bounds.py, now spanning connectivity regimes from the
+paper's k-regular clusters to the ring/hub extremes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, strategies as st
+
+from repro import topology
+from repro.core.bounds import exact_phi_ell, phi_ell_bound_from_stats
+from repro.core.graphs import degree_stats
+from repro.core.sampling import min_clients
+
+ALL_FAMILIES = topology.families()
+
+
+def _family_graphs(family, seed, n=24, c=3, rounds=3):
+    """A short trajectory of cluster adjacencies from one family."""
+    model = topology.make_spec(family, n=n, c=c).build()
+    rng = np.random.default_rng(seed)
+    ws = []
+    for t in range(rounds):
+        ws.extend(cg.W for cg in model.sample(rng, t))
+    return ws
+
+
+def _check_bound_dominates(family, seed):
+    for W in _family_graphs(family, seed):
+        stats = degree_stats(W)
+        bound = phi_ell_bound_from_stats(stats, "auto")
+        exact = exact_phi_ell(W)
+        # Prop. 5.1 truncates at O(eps^2); same documented slack as the
+        # test_core_bounds.py domination suite
+        slack = 4.0 * stats.eps ** 2 + 1e-6
+        assert bound + slack >= exact, (family, stats, bound, exact)
+
+
+def _check_min_clients_monotone(family, seed, n=24, c=3):
+    model = topology.make_spec(family, n=n, c=c).build()
+    rng = np.random.default_rng(seed)
+    clusters = model.sample(rng, 0)
+    psis = [phi_ell_bound_from_stats(c.stats, "auto") for c in clusters]
+    sizes = [c.size for c in clusters]
+    grid = [0.0, 0.01, 0.05, 0.2, 0.5, 1.0, 4.0, 1e6]
+    ms = [min_clients(psis, sizes, n, phi) for phi in grid]
+    assert all(1 <= m <= n for m in ms)
+    # looser threshold can only shrink the sample: non-increasing in
+    # phi_max, pinned at the extremes
+    assert all(a >= b for a, b in zip(ms, ms[1:])), (family, ms)
+    assert ms[0] == n
+    if sum(psis) > 0:
+        assert ms[-1] == 1
+
+
+# ---------------------------------------------------------------------------
+# hypothesis-driven (skip-degrades without the dev extra)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ALL_FAMILIES)
+@given(seed=st.integers(0, 2**31))
+@settings(max_examples=15, deadline=None)
+def test_bound_dominates_exact_phi_property(family, seed):
+    _check_bound_dominates(family, seed)
+
+
+@pytest.mark.parametrize("family", ALL_FAMILIES)
+@given(seed=st.integers(0, 2**31))
+@settings(max_examples=15, deadline=None)
+def test_min_clients_monotone_property(family, seed):
+    _check_min_clients_monotone(family, seed)
+
+
+# ---------------------------------------------------------------------------
+# seeded fallback (always runs)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ALL_FAMILIES)
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_bound_dominates_exact_phi_seeded(family, seed):
+    _check_bound_dominates(family, seed)
+
+
+@pytest.mark.parametrize("family", ALL_FAMILIES)
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_min_clients_monotone_seeded(family, seed):
+    _check_min_clients_monotone(family, seed)
+
+
+# ---------------------------------------------------------------------------
+# regime sanity: the families actually span the degree-stat space the
+# bound machinery is supposed to be exercised over
+# ---------------------------------------------------------------------------
+
+def test_families_span_distinct_degree_regimes():
+    stats = {}
+    for family in ALL_FAMILIES:
+        W = _family_graphs(family, seed=0, rounds=1)[0]
+        stats[family] = degree_stats(W)
+    # the paper's family: near-regular, alpha comfortably > 1/2
+    assert stats["k_regular"].alpha > 0.5
+    # ring: sparse worst case -- tiny alpha, zero degree spread
+    assert stats["ring"].alpha <= 0.5
+    assert stats["ring"].eps == 0.0 and stats["ring"].varphi == 0.0
+    # hub: the D2S-degenerate extreme -- in-degree explodes at the hub
+    assert stats["hub"].varphi > 1.0
+    assert stats["hub"].d_max_in == stats["hub"].size
+    # and the m(t) consequences differ: the sparse ring forces more
+    # uplinks than a clean k-regular cluster (eps = 0: Prop. 5.1 regime)
+    n, c = 24, 3
+    m_at = {}
+    for family, kw in (("k_regular", {"p_fail": 0.0}), ("ring", {})):
+        model = topology.make_spec(family, n=n, c=c, **kw).build()
+        clusters = model.sample(np.random.default_rng(0), 0)
+        psis = [phi_ell_bound_from_stats(cg.stats, "auto")
+                for cg in clusters]
+        m_at[family] = min_clients(psis, [cg.size for cg in clusters],
+                                   n, 0.2)
+    assert m_at["ring"] > m_at["k_regular"]

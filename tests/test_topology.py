@@ -1,0 +1,358 @@
+"""The declarative topology layer (ISSUE 5 tentpole).
+
+Covers: the registry + spec JSON round-trips for every family, the
+``k_regular`` family's bitwise reproduction of the legacy
+``D2DNetwork.sample`` rng stream (pinned against an inline copy of the
+pre-redesign loop), membership schemes (equal / skewed / explicit /
+periodic re-clustering), time-correlated sampling (geometric mobility),
+the CLI spec parser, and -- the acceptance criterion -- that
+``connectivity_aware`` plans build, embed their spec, regenerate
+bitwise from it, and execute on the ``LocalEngine`` for every
+registered family with finite ``psi_bound`` columns.
+"""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import topology
+from repro.core.adjacency import is_column_stochastic, network_matrix
+from repro.core.graphs import (ClusterGraph, D2DNetwork,
+                               delete_edge_fraction, k_regular_digraph)
+from repro.core.server import FederatedServer, ServerConfig
+from repro.fl import ExecutionConfig, RoundPlan, make_engine
+
+ALL_FAMILIES = topology.families()
+
+
+def quad_loss(params, batch):
+    x = params["x"]
+    b, = batch
+    return 0.5 * jnp.sum((x - b.mean(axis=0)) ** 2)
+
+
+def _quad_batches(n, rounds, p=3, T=2, B=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return [(jnp.asarray(rng.standard_normal((n, T, B, p)), jnp.float32),)
+            for _ in range(rounds)]
+
+
+# ---------------------------------------------------------------------------
+# the bitwise pin: k_regular == the pre-redesign D2DNetwork.sample loop
+# ---------------------------------------------------------------------------
+
+def _legacy_sample(n, c, k_range, p_fail, self_loops, rng,
+                   partition=None):
+    """Verbatim copy of the pre-redesign ``D2DNetwork.sample`` loop --
+    the reference this PR's shim and ``topology.k_regular`` must
+    reproduce bitwise."""
+    if partition is None:
+        per = n // c
+        partition = [np.arange(l * per, (l + 1) * per) for l in range(c)]
+    out = []
+    for verts in partition:
+        s = len(verts)
+        k = int(rng.integers(min(k_range), max(k_range) + 1))
+        k = min(k, s)
+        W = k_regular_digraph(s, k, rng, self_loops=self_loops)
+        if p_fail > 0:
+            W = delete_edge_fraction(W, p_fail, rng)
+        out.append(ClusterGraph(vertices=np.asarray(verts), W=W))
+    return out
+
+
+@pytest.mark.parametrize("seed", [0, 7, 1234])
+@pytest.mark.parametrize("n,c,k_range,p_fail", [
+    (70, 7, (6, 9), 0.1),
+    (12, 2, (4, 6), 0.0),
+    (24, 3, (3, 3), 0.3),
+])
+def test_k_regular_matches_legacy_stream_bitwise(n, c, k_range, p_fail,
+                                                 seed):
+    r_legacy, r_shim, r_model = (np.random.default_rng(seed)
+                                 for _ in range(3))
+    want = [_legacy_sample(n, c, k_range, p_fail, True, r_legacy)
+            for _ in range(3)]
+    shim = D2DNetwork(n=n, c=c, k_range=k_range, p_fail=p_fail)
+    model = topology.make_spec("k_regular", n=n, c=c, k_range=k_range,
+                               p_fail=p_fail).build()
+    for t, ref in enumerate(want):
+        got_shim = shim.sample(r_shim, t)
+        got_model = model.sample(r_model, t)
+        for a, b, d in zip(ref, got_shim, got_model):
+            np.testing.assert_array_equal(a.W, b.W)
+            np.testing.assert_array_equal(a.W, d.W)
+            np.testing.assert_array_equal(a.vertices, b.vertices)
+            np.testing.assert_array_equal(a.vertices, d.vertices)
+
+
+def test_k_regular_explicit_partition_matches_legacy():
+    parts = [np.array([0, 3, 5, 7, 9, 11]), np.array([1, 2, 4, 6, 8, 10])]
+    r1, r2 = np.random.default_rng(5), np.random.default_rng(5)
+    want = _legacy_sample(12, 2, (3, 4), 0.2, True, r1,
+                          partition=[p.copy() for p in parts])
+    shim = D2DNetwork(n=12, c=2, k_range=(3, 4), p_fail=0.2,
+                      partition=[p.copy() for p in parts])
+    got = shim.sample(r2)
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(a.W, b.W)
+        np.testing.assert_array_equal(a.vertices, b.vertices)
+    # and the spec round-trips the explicit membership
+    spec = shim.spec
+    assert spec.membership == "explicit"
+    rebuilt = topology.build(spec)
+    r3 = np.random.default_rng(5)
+    for a, b in zip(want, rebuilt.sample(r3, 0)):
+        np.testing.assert_array_equal(a.W, b.W)
+
+
+# ---------------------------------------------------------------------------
+# registry + spec serialization
+# ---------------------------------------------------------------------------
+
+def test_registry_has_the_required_families():
+    assert {"k_regular", "erdos_renyi", "geometric", "ring",
+            "small_world", "hub"} <= set(ALL_FAMILIES)
+    assert len(ALL_FAMILIES) >= 5
+
+
+@pytest.mark.parametrize("family", ALL_FAMILIES)
+def test_spec_json_round_trip_exact(family):
+    spec = topology.make_spec(family, n=24, c=3)
+    back = topology.TopologySpec.from_dict(json.loads(spec.to_json()))
+    assert back == spec
+    assert back.to_json() == spec.to_json()
+    # from_json builds a working model of the same spec
+    model = topology.from_json(spec.to_json())
+    assert model.spec == spec
+
+
+def test_spec_round_trip_with_nondefault_and_tuple_params():
+    spec = topology.make_spec(
+        "k_regular", n=20, c=2, k_range=(3, 5), p_fail=0.25,
+        self_loops=False, membership="skewed",
+        membership_params={"gamma": 0.5, "recluster_every": 3})
+    back = topology.TopologySpec.from_dict(json.loads(spec.to_json()))
+    assert back == spec
+    assert back.params["k_range"] == (3, 5)       # tuple survives JSON
+
+
+def test_make_spec_validates_names_and_params():
+    with pytest.raises(ValueError, match="unknown topology family"):
+        topology.make_spec("nope", n=10, c=2)
+    with pytest.raises(ValueError, match="unknown parameter"):
+        topology.make_spec("ring", n=10, c=2, radius=0.3)
+    with pytest.raises(ValueError, match="membership"):
+        topology.make_spec("ring", n=10, c=2, membership="wat")
+    with pytest.raises(ValueError, match="membership parameter"):
+        topology.make_spec("ring", n=10, c=2,
+                           membership_params={"gamma": 0.5})
+
+
+def test_parse_spec_cli_syntax():
+    spec = topology.parse_spec("k_regular:k_range=6-9,p_fail=0.2", n=70,
+                               c=7)
+    assert spec.params["k_range"] == (6, 9)
+    assert spec.params["p_fail"] == 0.2
+    spec = topology.parse_spec(
+        "geometric:radius=0.3,membership=skewed,gamma=0.6,"
+        "recluster_every=4,self_loops=false", n=20, c=2)
+    assert spec.family == "geometric" and spec.membership == "skewed"
+    assert spec.membership_params == {"gamma": 0.6, "recluster_every": 4}
+    assert spec.params["self_loops"] is False
+    assert topology.parse_spec("ring", n=10, c=2).family == "ring"
+    with pytest.raises(ValueError, match="key=val"):
+        topology.parse_spec("ring:hops", n=10, c=2)
+
+
+# ---------------------------------------------------------------------------
+# families produce valid cluster digraphs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ALL_FAMILIES)
+@pytest.mark.parametrize("seed", [0, 3])
+def test_family_snapshots_are_valid(family, seed):
+    model = topology.make_spec(family, n=24, c=3).build()
+    rng = np.random.default_rng(seed)
+    for t in range(3):
+        clusters = model.sample(rng, t)
+        assert len(clusters) == 3
+        all_verts = np.concatenate([c.vertices for c in clusters])
+        assert sorted(all_verts.tolist()) == list(range(24))
+        for cg in clusters:
+            assert (cg.W.sum(axis=1) >= 1).all()     # positive out-degree
+            assert cg.stats.size == cg.size          # degree_stats works
+        A = network_matrix(clusters, 24)
+        assert is_column_stochastic(A)
+
+
+def test_membership_equal_matches_legacy_partition():
+    parts = topology.make_partition(70, 7, "equal")
+    for l, v in enumerate(parts):
+        np.testing.assert_array_equal(v, np.arange(10 * l, 10 * (l + 1)))
+    with pytest.raises(ValueError, match="c | n"):
+        topology.make_partition(10, 3, "equal")
+
+
+def test_membership_skewed_covers_and_skews():
+    parts = topology.make_partition(30, 3, "skewed", {"gamma": 0.5})
+    sizes = [len(v) for v in parts]
+    assert sum(sizes) == 30 and min(sizes) >= 1
+    assert sizes == sorted(sizes, reverse=True) and sizes[0] > sizes[-1]
+    assert sorted(np.concatenate(parts).tolist()) == list(range(30))
+
+
+def test_membership_periodic_reclustering():
+    model = topology.make_spec(
+        "erdos_renyi", n=12, c=2,
+        membership_params={"recluster_every": 2}).build()
+    rng = np.random.default_rng(0)
+    parts = []
+    for t in range(4):
+        parts.append([c.vertices.tolist()
+                      for c in model.sample(rng, t)])
+    assert parts[0] == parts[1]          # shuffle only at the period
+    assert parts[2] != parts[0]          # t=2: re-clustered
+    assert parts[2] == parts[3]
+    for p in parts:                      # sizes + coverage preserved
+        assert [len(v) for v in p] == [6, 6]
+        assert sorted(sum(p, [])) == list(range(12))
+
+
+def test_time_correlated_requires_consecutive_t():
+    model = topology.make_spec("geometric", n=12, c=2).build()
+    rng = np.random.default_rng(0)
+    model.sample(rng, 0)
+    model.sample(rng, 1)
+    with pytest.raises(ValueError, match="consecutive"):
+        model.sample(rng, 5)
+    model.sample(rng, 0)                 # t=0 resets the trajectory
+    model.sample(rng, 1)
+
+
+def test_geometric_snapshots_are_time_correlated_and_deterministic():
+    spec = topology.make_spec("geometric", n=20, c=2, radius=0.4,
+                              speed=0.05)
+    model = spec.build()
+    rng = np.random.default_rng(0)
+    snaps = [model.sample(rng, t) for t in range(3)]
+
+    def edges(clusters):
+        return set((l,) + tuple(e) for l, c in enumerate(clusters)
+                   for e in np.argwhere(c.W))
+
+    e0, e1 = edges(snaps[0]), edges(snaps[1])
+    overlap = len(e0 & e1) / len(e0 | e1)
+    # small per-round motion => consecutive snapshots share most edges
+    assert overlap > 0.5
+    # an independent draw (different seed) shares far fewer
+    fresh = edges(spec.build().sample(np.random.default_rng(99), 0))
+    assert len(e0 & fresh) / len(e0 | fresh) < overlap
+    # same seed => bitwise-identical trajectory (the regenerate contract)
+    model2 = spec.build()
+    rng2 = np.random.default_rng(0)
+    for t, ref in enumerate(snaps):
+        got = model2.sample(rng2, t)
+        for a, b in zip(ref, got):
+            np.testing.assert_array_equal(a.W, b.W)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: plans build, embed provenance, regenerate, and execute on
+# the LocalEngine for every registered family
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ALL_FAMILIES)
+def test_connectivity_aware_plan_builds_and_executes(family):
+    spec = topology.make_spec(family, n=12, c=2)
+    model = spec.build()
+    cfg = ServerConfig(T=2, t_max=3, phi_max=0.3, seed=0)
+    plan = RoundPlan.connectivity_aware(model, cfg)
+    assert np.isfinite(plan.psi_bound_t).all()
+    assert plan.topology == spec and plan.seed == 0
+    np.testing.assert_allclose(plan.A_t.sum(axis=1), 1.0, atol=1e-5)
+
+    engine = make_engine(ExecutionConfig(backend="einsum"), quad_loss)
+    params, hist = engine.execute(plan, {"x": jnp.zeros(3)},
+                                  _quad_batches(12, 3))
+    assert len(hist.records) == 3
+    assert np.isfinite(np.asarray(params["x"])).all()
+
+
+@pytest.mark.parametrize("family", ALL_FAMILIES)
+def test_plan_regenerates_bitwise_from_embedded_spec(family):
+    model = topology.make_spec(family, n=12, c=2).build()
+    cfg = ServerConfig(T=2, t_max=4, phi_max=0.3, seed=11)
+    plan = RoundPlan.connectivity_aware(model, cfg)
+    back = RoundPlan.from_json(plan.to_json())
+    assert back.topology == plan.topology and back.seed == plan.seed
+    regen = back.regenerate()
+    assert regen.allclose(plan)
+    # dropout plans regenerate through the same provenance
+    dropped = plan.with_dropout(0.3, np.random.default_rng(2))
+    regen_d = RoundPlan.from_json(dropped.to_json()).regenerate()
+    assert regen_d.allclose(dropped)
+
+
+def test_legacy_d2dnetwork_plan_regenerates_from_embedded_spec():
+    """The pinned pre-redesign path: a plan built from the deprecated
+    ``D2DNetwork`` shim serializes with an embedded k_regular spec and
+    regenerates its columns bitwise."""
+    net = D2DNetwork(n=12, c=2, k_range=(4, 6), p_fail=0.1)
+    cfg = ServerConfig(T=3, t_max=5, phi_max=0.3, seed=3)
+    for ctor in (RoundPlan.connectivity_aware, RoundPlan.colrel,
+                 RoundPlan.fedavg):
+        kw = (ServerConfig(T=3, t_max=5, phi_max=0.3, seed=3, m_fixed=6)
+              if ctor is not RoundPlan.connectivity_aware else cfg)
+        plan = ctor(net, kw)
+        assert plan.topology is not None
+        assert plan.topology.family == "k_regular"
+        regen = RoundPlan.from_json(plan.to_json()).regenerate()
+        assert regen.allclose(plan)
+
+
+def test_plan_without_provenance_refuses_to_regenerate():
+    net = D2DNetwork(n=12, c=2, k_range=(4, 6))
+    cfg = ServerConfig(T=2, t_max=2, phi_max=0.3, seed=0)
+    # external rng: replayable, not regenerable
+    plan = RoundPlan.connectivity_aware(net, cfg,
+                                        rng=np.random.default_rng(0))
+    assert plan.seed is None
+    with pytest.raises(ValueError, match="provenance"):
+        plan.regenerate()
+
+
+def test_version1_plan_json_still_loads():
+    net = D2DNetwork(n=12, c=2, k_range=(4, 6))
+    plan = RoundPlan.connectivity_aware(
+        net, ServerConfig(T=2, t_max=2, phi_max=0.3, seed=0))
+    d = json.loads(plan.to_json())
+    for legacy_absent in ("topology", "seed", "t0"):
+        d.pop(legacy_absent)
+    d["version"] = 1
+    old = RoundPlan.from_json(json.dumps(d))
+    assert old.allclose(plan)
+    assert old.topology is None and old.seed is None and old.t0 == 0
+
+
+def test_server_runs_any_topology_model():
+    """FederatedServer accepts a TopologyModel directly (not just the
+    deprecated shim) -- and a time-correlated family works end-to-end."""
+    model = topology.make_spec("geometric", n=12, c=2, radius=0.45).build()
+    cfg = ServerConfig(T=2, t_max=3, phi_max=0.3, seed=0)
+    rng = np.random.default_rng(1)
+    targets = rng.standard_normal((12, 3)).astype(np.float32)
+
+    def sampler(r, t):
+        samp = targets[:, None, None, :] \
+            + 0.05 * r.standard_normal((12, 2, 2, 3))
+        return (jnp.asarray(samp, jnp.float32),)
+
+    server = FederatedServer(model, quad_loss, {"x": jnp.zeros(3)},
+                             sampler, cfg, algorithm="semidec",
+                             execution=ExecutionConfig(backend="einsum"))
+    hist = server.run()
+    assert len(hist.records) == 3
+    assert server.last_plan.topology == model.spec
