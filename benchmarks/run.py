@@ -4,6 +4,8 @@
   comm_cost       -- Figs. 2-5 (high/low D2S regimes)
   dropout_sweep   -- d2s/d2d-per-accuracy over dropout rate x topology
                      family x straggler model (iid vs bursty Markov)
+  staleness_sweep -- semi-async StreamEngine: buffer size x upload
+                     latency distribution (late/lost/staleness totals)
   convergence     -- Theorem 4.5 O(1/t) envelope
   mixing_kernel   -- Pallas D2D-mixing kernel vs oracle
   roofline_table  -- §Roofline terms from dry-run artifacts (if present)
@@ -38,8 +40,8 @@ from . import (comm_cost, convergence, dropout_sweep, mixing_kernel,
                roofline_table, singular_bounds, topology_ablation)
 
 BENCHES = ("singular_bounds", "topology_ablation", "comm_cost",
-           "dropout_sweep", "convergence", "mixing_kernel",
-           "roofline_table")
+           "dropout_sweep", "staleness_sweep", "convergence",
+           "mixing_kernel", "roofline_table")
 
 # payload-byte fields pinned by --check-baseline: deterministic models /
 # measurements (never wall times), so any increase is a real regression
@@ -143,6 +145,10 @@ def main(argv=None) -> int:
         elif name == "dropout_sweep":
             results[name] = dropout_sweep.run(
                 rates=(0.0, 0.2) if args.fast else (0.0, 0.1, 0.3),
+                rounds=3 if args.fast else 6)
+        elif name == "staleness_sweep":
+            results[name] = dropout_sweep.run_staleness(
+                buffers=(None, 6) if args.fast else (None, 12, 6),
                 rounds=3 if args.fast else 6)
         elif name == "convergence":
             results[name] = convergence.run(rounds=10 if args.fast else 40,

@@ -16,11 +16,19 @@ The server is a thin host-side driver around two first-class objects:
 
 ``run()`` is therefore just::
 
-    plan  = rows from repro.fl.plan.plan_rows (interleaved with batch
-            draws on the server rng, preserving legacy trajectories
-            bitwise) -- or a caller-provided plan (``run(plan=...)``,
+    plan  = RoundPlan.<algorithm>(network, config) -- planned on its own
+            seeded rng stream, so the seed embeds and the plan is
+            *regenerable* -- or a caller-provided plan (``run(plan=...)``,
             e.g. one loaded from JSON)
     self.params, history = engine.execute(plan, params, batches, ...)
+
+Planning and batch sampling draw from SPLIT rng streams: planning from
+``default_rng(config.seed)`` (owned by the ``RoundPlan`` constructors,
+embedded in the plan for ``plan.regenerate()``), batches from the
+derived stream ``default_rng([config.seed, 1])``.  Because the batch
+stream no longer interleaves with planning draws, replaying a saved
+plan (``run(plan=...)``) consumes the batch stream identically to the
+original planning run -- same seed, same batches, bitwise.
 
 Straggler masks (``active_t``) are a plan column, not a runtime flag:
 ``plan.with_dropout(rate)`` drops clients per round, the engines thread
@@ -80,6 +88,11 @@ class RoundRecord:
     d2d: int
     eta: float
     metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # streaming telemetry (repro.fl.stream): deadline hits, late/lost/
+    # duplicate uploads, staleness stats, weighted divisor, shortfall.
+    # None for every synchronous round, so a fault-free semi-async run
+    # records bit-identical History to the synchronous engines.
+    stream: Optional[Dict[str, float]] = None
 
 
 @dataclasses.dataclass
@@ -170,7 +183,9 @@ class FederatedServer:
         self.batch_sampler = batch_sampler
         self.execution = execution
         self.engine = make_engine(execution, loss_fn)
-        self.rng = np.random.default_rng(config.seed)
+        # batch stream only; planning owns default_rng(config.seed) so
+        # the plan seed embeds and server-built plans regenerate()
+        self.rng = np.random.default_rng([config.seed, 1])
         self.last_plan = None
 
     @property
@@ -179,33 +194,25 @@ class FederatedServer:
         ``resolve_backend``, e.g. 'fused' upgraded to 'aggregate')."""
         return self.engine.backend
 
-    # -- plan + batches (shared rng stream, legacy consumption order) ------
+    # -- plan + batches (split rng streams: plan seeded, batches derived) --
 
     def _plan_and_batches(self, plan=None):
         """Build (or adopt) the trajectory and draw the per-round batches.
 
-        When planning here, plan rows and batch draws interleave on
-        ``self.rng`` exactly like the legacy per-round loop, so
-        trajectories are bitwise-reproducible across the redesign."""
-        from repro.fl.plan import RoundPlan, plan_rows
+        Planning runs on its own seeded stream (inside the ``RoundPlan``
+        constructors, which therefore embed ``config.seed`` as
+        regenerable provenance); batches always come from ``self.rng``,
+        so a replayed plan consumes the batch stream exactly like the
+        planning run did."""
+        from repro.fl.plan import RoundPlan
 
         cfg = self.config
         if plan is None:
-            rows, batches = [], []
-            gen = plan_rows(self.network, cfg, self.algorithm, self.rng)
-            for t in range(cfg.t_max):
-                rows.append(next(gen))
-                batches.append(self.batch_sampler(self.rng, t))
-            # topology provenance rides along; seed stays None because
-            # batch draws interleave on the same rng stream, so the
-            # columns are replayable (JSON) but not regenerable from
-            # seed alone -- use the RoundPlan constructors for that
-            from repro.topology import TopologySpec
-            spec = getattr(self.network, "spec", None)
-            spec = spec if isinstance(spec, TopologySpec) else None
-            return RoundPlan.from_rows(rows, self.algorithm,
-                                       topology=spec), batches
-        if plan.n_clients != self.network.n:
+            ctor = {"semidec": RoundPlan.connectivity_aware,
+                    "fedavg": RoundPlan.fedavg,
+                    "colrel": RoundPlan.colrel}[self.algorithm]
+            plan = ctor(self.network, cfg)
+        elif plan.n_clients != self.network.n:
             raise ValueError(
                 f"plan is for {plan.n_clients} clients, network has "
                 f"{self.network.n}")

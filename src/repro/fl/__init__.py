@@ -1,7 +1,9 @@
 """Distributed (mesh) implementation of the paper's semi-decentralized FL
 round, the sharded inference steps, and the declarative plan/engine API:
 ``RoundPlan`` (the whole time-varying trajectory as one serializable host
-object) executed by an ``Engine`` selected via ``ExecutionConfig``.
+object) executed by an ``Engine`` selected via ``ExecutionConfig`` --
+synchronous (``LocalEngine``/``MeshEngine``) or semi-asynchronous
+(``StreamEngine``, driven by a declarative ``FaultSpec``).
 ``repro.core.rounds`` is the single-host oracle with identical semantics.
 """
 
@@ -10,9 +12,13 @@ from .distributed import (MIXINGS, make_train_step,
                           make_decode_step, build_topology_inputs)
 from .engine import (Engine, ExecutionConfig, LocalEngine, MeshEngine,
                      make_engine, resolve_backend)
+from .faults import (FAILURE_KINDS, LATENCY_KINDS, FaultSpec, FaultTrace,
+                     parse_fault_spec, sample_trace)
 from .packing import (GroupSpec, GroupedPackSpec, apply_aggregate_row,
                       pack, pack_spec, unpack, unpack_row)
 from .plan import PlanRow, RoundPlan, plan_rows
+from .stream import (STALENESS_KINDS, StreamConfig, StreamEngine,
+                     staleness_weight)
 
 __all__ = ["MIXINGS", "make_train_step", "make_scanned_train_steps",
            "make_prefill_step", "make_decode_step",
@@ -20,4 +26,8 @@ __all__ = ["MIXINGS", "make_train_step", "make_scanned_train_steps",
            "pack", "pack_spec", "unpack", "unpack_row",
            "apply_aggregate_row", "Engine", "ExecutionConfig",
            "LocalEngine", "MeshEngine", "make_engine", "resolve_backend",
-           "PlanRow", "RoundPlan", "plan_rows"]
+           "PlanRow", "RoundPlan", "plan_rows",
+           "FAILURE_KINDS", "LATENCY_KINDS", "FaultSpec", "FaultTrace",
+           "parse_fault_spec", "sample_trace",
+           "STALENESS_KINDS", "StreamConfig", "StreamEngine",
+           "staleness_weight"]

@@ -14,6 +14,9 @@ kwargs lives in ``resolve_backend`` and nowhere else.
                       (``make_round_fn`` / ``make_scanned_rounds``).
     MeshEngine        mesh runtime over ``repro.fl.distributed``
                       (``make_train_step`` / ``make_scanned_train_steps``).
+    StreamEngine      event-driven semi-async runtime
+                      (``repro.fl.stream``), selected by
+                      ``ExecutionConfig(stream=StreamConfig(...))``.
     make_engine       ExecutionConfig -> the right engine.
 
 Backend selection (one matrix, one place)::
@@ -25,6 +28,9 @@ Backend selection (one matrix, one place)::
                                                 'aggregate'
     MeshEngine   ring | gather | einsum         unsupported       yes
                  | fused | fused_rs
+    StreamEngine einsum | pallas | fused        unsupported       no
+                 | aggregate (pallas/fused      (mixed deltas     (event
+                 always -> 'aggregate')         never kept)       loop)
 
 Straggler masks: when ``plan.has_dropout`` the per-round ``active_t``
 column is threaded into the round functions (inactive clients contribute
@@ -66,6 +72,8 @@ class ExecutionConfig:
     deltas materialized (single-host only); otherwise the kernel backends
     upgrade to the aggregate-only fast path.  ``chunk``/``interpret``
     tune the Pallas kernels (``interpret=None`` resolves per platform).
+    ``stream`` (a ``repro.fl.stream.StreamConfig``) selects the
+    event-driven semi-async runtime instead of the synchronous ones.
     """
     backend: str = "einsum"
     scan: bool = False
@@ -75,14 +83,37 @@ class ExecutionConfig:
     jit: bool = True
     mesh: Any = None
     model_cfg: Any = None
+    stream: Any = None
 
 
 def resolve_backend(cfg: ExecutionConfig) -> str:
     """Validate ``cfg`` and return the *effective* backend name.
 
-    The entire backend-selection matrix: mesh vs single-host, the
-    record_mixed upgrade to 'aggregate', and every invalid combination.
+    The entire backend-selection matrix: mesh vs single-host vs stream,
+    the record_mixed upgrade to 'aggregate', and every invalid
+    combination.
     """
+    if cfg.stream is not None:
+        if cfg.mesh is not None:
+            raise ValueError("the stream runtime is single-host; "
+                             "cfg.mesh is unsupported with cfg.stream")
+        if cfg.scan:
+            raise ValueError(
+                "scan=True contradicts the stream runtime: round closure "
+                "is an event-driven host loop, not a lax.scan")
+        if cfg.record_mixed:
+            raise ValueError(
+                "record_mixed is not supported on the stream runtime: "
+                "stale cohorts aggregate through combine rows and never "
+                "materialize mixed deltas")
+        if cfg.backend not in MIXING_BACKENDS:
+            raise ValueError(
+                f"mixing_backend must be one of {MIXING_BACKENDS}, "
+                f"got {cfg.backend!r}")
+        # stale cohorts always take the aggregate-only combine-row path
+        if cfg.backend in ("pallas", "fused"):
+            return "aggregate"
+        return cfg.backend
     if cfg.mesh is not None:
         if cfg.model_cfg is None:
             raise ValueError("mesh runtime requires model_cfg")
@@ -188,6 +219,10 @@ class LocalEngine:
         if cfg.mesh is not None:
             raise ValueError("LocalEngine does not take a mesh; use "
                              "MeshEngine (or make_engine)")
+        if cfg.stream is not None:
+            raise ValueError("LocalEngine is synchronous; use "
+                             "StreamEngine (or make_engine) for "
+                             "cfg.stream")
         self.cfg = cfg
         self.loss_fn = loss_fn
         self.backend = resolve_backend(cfg)
@@ -236,6 +271,9 @@ class MeshEngine:
     def __init__(self, cfg: ExecutionConfig):
         if cfg.mesh is None:
             raise ValueError("MeshEngine requires cfg.mesh")
+        if cfg.stream is not None:
+            raise ValueError("MeshEngine is synchronous; cfg.stream is "
+                             "unsupported on the mesh runtime")
         self.cfg = cfg
         self.backend = resolve_backend(cfg)
 
@@ -275,6 +313,10 @@ class MeshEngine:
 def make_engine(cfg: ExecutionConfig, loss_fn=None) -> Engine:
     """ExecutionConfig -> the engine that implements it.  The only
     runtime dispatch the server (or any driver) needs."""
+    if cfg.stream is not None:
+        # deferred: stream imports back into this module at class init
+        from .stream import StreamEngine
+        return StreamEngine(loss_fn, cfg)
     if cfg.mesh is not None:
         return MeshEngine(cfg)
     return LocalEngine(loss_fn, cfg)

@@ -24,7 +24,15 @@ Columns (K = number of rounds, n = number of clients):
                               the paper's full-participation setting.
 
 plus per-round bookkeeping for ``History`` records (planned/actual
-sample sizes, D2D transmission counts, the eq.-6 psi bound).
+sample sizes, D2D transmission counts, the eq.-6 psi bound) and an
+*optional* streaming column:
+
+    arrival_t  (K, n)    f32  per-upload delay after round dispatch
+                              (``inf`` = never delivered).  Absent
+                              (None) for synchronous plans; attached by
+                              ``with_faults``/``with_arrivals`` and
+                              consumed only by ``StreamEngine`` --
+                              synchronous engines ignore it.
 
 Constructors map one-to-one onto the algorithms the server runs:
 
@@ -51,7 +59,11 @@ Straggler support is a plan *transform*, not a runtime flag:
 ``plan.with_markov_dropout(p_fail, p_recover)`` bursty two-state chains
 per client, ``plan.with_cluster_dropout(rate)`` whole-cluster outages,
 and ``plan.with_active(mask)`` takes any explicit mask; all renormalize
-the ``m_t``/``d2s`` bookkeeping to the surviving uploads.
+the ``m_t``/``d2s`` bookkeeping to the surviving uploads.  The mask
+generators themselves live in ``repro.fl.faults`` (one rng stream shared
+with the fault-injection layer); ``plan.with_faults(trace)`` applies a
+full ``FaultTrace`` -- availability mask plus arrival times -- in one
+transform.
 
 Round-resumable: ``plan[t0:]`` slices the trajectory (columns +
 bookkeeping preserved, ``t0`` recorded so History round indices stay
@@ -76,12 +88,15 @@ from repro.core.bounds import exact_phi_ell, phi_ell_bound_from_stats, \
 from repro.core.metrics import count_d2d_transmissions
 from repro.topology import TopologySpec
 
+from . import faults as _faults
+
 __all__ = ["ALGORITHMS", "PlanRow", "RoundPlan", "plan_rows"]
 
 ALGORITHMS = ("semidec", "fedavg", "colrel")
 
-_JSON_VERSION = 2
-_JSON_SUPPORTED = (1, 2)     # v1: pre-topology plans (no embedded spec)
+_JSON_VERSION = 3
+# v1: pre-topology plans (no embedded spec); v2: no arrival_t column
+_JSON_SUPPORTED = (1, 2, 3)
 
 
 def _sample_snapshot(network, rng, t):
@@ -200,6 +215,8 @@ class RoundPlan:
     d2s_t: np.ndarray          # (K,)      int64
     d2d_t: np.ndarray          # (K,)      int64
     psi_bound_t: np.ndarray    # (K,)      float64
+    # -- streaming bookkeeping (None for synchronous plans) -------------
+    arrival_t: Optional[np.ndarray] = None   # (K, n) f32, inf = lost
     # -- provenance: who generated these columns, and from where --------
     topology: Optional[TopologySpec] = None   # embedded topology spec
     seed: Optional[int] = None     # planning seed (None: external rng)
@@ -219,6 +236,13 @@ class RoundPlan:
             if getattr(self, name).shape != (K,):
                 raise ValueError(
                     f"{name} must be ({K},), got {getattr(self, name).shape}")
+        if self.arrival_t is not None:
+            if self.arrival_t.shape != (K, n):
+                raise ValueError(
+                    f"arrival_t must be ({K}, {n}), got "
+                    f"{self.arrival_t.shape}")
+            if (self.arrival_t < 0).any():
+                raise ValueError("arrival_t must be non-negative")
         if self.algorithm not in ALGORITHMS:
             raise ValueError(f"algorithm must be one of {ALGORITHMS}")
         if self.t0 < 0:
@@ -269,6 +293,8 @@ class RoundPlan:
                 m_planned_t=self.m_planned_t[sl],
                 m_actual_t=self.m_actual_t[sl], d2s_t=self.d2s_t[sl],
                 d2d_t=self.d2d_t[sl], psi_bound_t=self.psi_bound_t[sl],
+                arrival_t=(None if self.arrival_t is None
+                           else self.arrival_t[sl]),
                 t0=self.t0 + start)
         t = int(idx)
         if t < 0:
@@ -388,8 +414,8 @@ class RoundPlan:
             raise ValueError(f"need 0 <= rate < 1, got {rate}")
         if rng is None:
             rng = np.random.default_rng(0)
-        mask = (rng.random(self.tau_t.shape) >= rate).astype(np.float32)
-        return self.with_active(mask)
+        K, n = self.tau_t.shape
+        return self.with_active(_faults.iid_active(rng, K, n, rate))
 
     def with_markov_dropout(self, p_fail: float, p_recover: float,
                             rng: Optional[np.random.Generator] = None
@@ -410,15 +436,8 @@ class RoundPlan:
         if rng is None:
             rng = np.random.default_rng(0)
         K, n = self.tau_t.shape
-        pi_active = (p_recover / (p_fail + p_recover)
-                     if p_fail + p_recover > 0 else 1.0)
-        state = rng.random(n) < pi_active
-        mask = np.empty((K, n), np.float32)
-        for t in range(K):
-            mask[t] = state
-            u = rng.random(n)
-            state = np.where(state, u >= p_fail, u < p_recover)
-        return self.with_active(mask)
+        return self.with_active(
+            _faults.markov_active(rng, K, n, p_fail, p_recover))
 
     def with_cluster_dropout(self, rate: float,
                              rng: Optional[np.random.Generator] = None,
@@ -442,12 +461,36 @@ class RoundPlan:
             partition = self.topology.build().partition
         if rng is None:
             rng = np.random.default_rng(0)
-        mask = np.ones(self.tau_t.shape, np.float32)
-        for t in range(self.n_rounds):
-            for verts in partition:
-                if rng.random() < rate:
-                    mask[t, np.asarray(verts)] = 0.0
-        return self.with_active(mask)
+        K, n = self.tau_t.shape
+        return self.with_active(
+            _faults.cluster_active(rng, K, partition, n, rate))
+
+    # -- streaming transforms ------------------------------------------------
+
+    def with_arrivals(self, arrival_t: Optional[np.ndarray]
+                      ) -> "RoundPlan":
+        """Attach (or clear, with None) the per-upload arrival-delay
+        column.  Pure bookkeeping: synchronous engines never read it;
+        ``StreamEngine`` folds it into its virtual-time closure rule."""
+        if arrival_t is not None:
+            arrival_t = np.asarray(arrival_t, np.float32)
+        return dataclasses.replace(self, arrival_t=arrival_t)
+
+    def with_faults(self, trace) -> "RoundPlan":
+        """Apply a realized ``repro.fl.faults.FaultTrace``: the trace's
+        availability mask (failure chains AND departures) composes into
+        ``active_t`` -- renormalizing ``m_t``/``d2s``/``d2d`` exactly
+        like the dropout transforms -- and its arrival delays become the
+        ``arrival_t`` column.  A zero-latency trace applied here and
+        run synchronously is bitwise-identical to the same trace run
+        through ``StreamEngine`` (the equivalence the stream tests pin).
+        """
+        if (trace.K, trace.n) != self.tau_t.shape:
+            raise ValueError(
+                f"trace is ({trace.K}, {trace.n}), plan needs "
+                f"{self.tau_t.shape}")
+        out = self.with_active(self.active_t * trace.active)
+        return out.with_arrivals(trace.arrival)
 
     # -- regeneration from provenance ---------------------------------------
 
@@ -494,7 +537,9 @@ class RoundPlan:
                 d2d=int(d2d), psi_bound=float(self.psi_bound_t[t])))
         base = RoundPlan.from_rows(rows, self.algorithm,
                                    topology=self.topology, seed=self.seed)
-        return base.with_active(self.active_t) if self.has_dropout else base
+        if self.has_dropout:
+            base = base.with_active(self.active_t)
+        return base.with_arrivals(self.arrival_t)
 
     # -- serialization ------------------------------------------------------
 
@@ -526,6 +571,10 @@ class RoundPlan:
             "d2d_t": self.d2d_t.tolist(),
             "psi_bound_t": [None if not math.isfinite(v) else v
                             for v in self.psi_bound_t.tolist()],
+            "arrival_t": (None if self.arrival_t is None else
+                          [[None if not math.isfinite(v) else v
+                            for v in row]
+                           for row in self.arrival_t.tolist()]),
         }
         return json.dumps(payload)
 
@@ -555,6 +604,11 @@ class RoundPlan:
             psi_bound_t=np.asarray(
                 [math.nan if v is None else v for v in d["psi_bound_t"]],
                 np.float64),
+            arrival_t=(None if d.get("arrival_t") is None else
+                       np.asarray([[math.inf if v is None else v
+                                    for v in row]
+                                   for row in d["arrival_t"]],
+                                  np.float32)),
         )
 
     def save(self, path: str) -> None:
@@ -573,11 +627,18 @@ class RoundPlan:
             return False
         for f in dataclasses.fields(self):
             a, b = getattr(self, f.name), getattr(other, f.name)
-            if isinstance(a, np.ndarray):
+            if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+                # optional columns: None on one side only is a mismatch
+                if a is None or b is None:
+                    return False
                 if a.shape != b.shape or a.dtype != b.dtype:
                     return False
-                eq = (a == b) | (np.isnan(a) & np.isnan(b)) \
-                    if np.issubdtype(a.dtype, np.floating) else (a == b)
+                if np.issubdtype(a.dtype, np.floating):
+                    eq = (a == b) | (np.isnan(a) & np.isnan(b)) \
+                        | (np.isinf(a) & np.isinf(b) & (np.sign(a)
+                                                        == np.sign(b)))
+                else:
+                    eq = a == b
                 if not eq.all():
                     return False
         return True

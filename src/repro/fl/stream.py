@@ -1,0 +1,409 @@
+"""StreamEngine: staleness-aware semi-asynchronous aggregation.
+
+The synchronous engines execute one plan round at a time: every sampled
+client's delta lands before the eq.-4 update.  Real edge clients do not
+cooperate -- they fail, stall, upload late, deliver twice, or leave.
+``StreamEngine`` is the third runtime beside ``LocalEngine`` /
+``MeshEngine``: clients train and upload on their own clocks (virtual
+time, driven by a ``repro.fl.faults.FaultTrace``), and the server closes
+round ``t`` when either ``b`` buffered uploads have landed (FedBuff,
+Nguyen et al.) or a deadline expires -- whichever comes first.
+
+Semi-async model (virtual time):
+
+* round ``t`` dispatches at ``D_t = C_{t-1}`` (the previous closure):
+  the current globals are snapshotted and every sampled-and-alive client
+  starts local SGD; its upload lands at ``D_t + arrival_t[t, i]``.
+* the server closes at ``C_t = min(b-th unconsumed arrival,
+  D_t + deadline)`` and consumes *every* upload that has arrived, from
+  any round not older than ``max_staleness``.
+* an upload dispatched at round ``r`` and consumed at round ``t`` has
+  staleness ``s = t - r`` and weight ``w(s)`` (``staleness_weight``:
+  polynomial ``(1+s)^-a`` or exponential ``a^s`` discounting); the
+  weights fold into the ``combine_weights`` row -- the same
+  zero-payload-cost trick as the ``active_t`` mask, no kernel changes --
+  and the eq.-4 divisor becomes the *weighted* upload count.
+
+Graceful degradation, not crashes: a round with zero surviving uploads
+skips the aggregate and carries params forward (``m_actual = 0``); a
+deadline-cut round renormalizes to whatever arrived and records the
+shortfall; over-stale uploads are discarded and counted.  Per-round
+streaming telemetry rides in ``RoundRecord.stream`` (None for pristine
+rounds, so a fault-free History is bit-identical to the synchronous
+one).
+
+Equivalences, locked by tests the way every previous backend was:
+
+* full buffer (``buffer=None``), zero latency, no faults: every closure
+  consumes exactly its own full cohort at weight 1.0, and the engine
+  runs the *same* jitted ``make_round_fn`` as ``LocalEngine`` --
+  History and params reproduce the synchronous run bitwise.
+* a zero-latency ``FaultTrace`` streamed here equals
+  ``LocalEngine`` on ``plan.with_faults(trace)`` bitwise (failure
+  chains reduce to straggler masks when nobody is late).
+* any seeded ``FaultSpec`` trajectory replays bitwise from its JSON
+  round-trip (all randomness is materialized host-side up front).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.metrics import CommLedger
+from repro.core.rounds import client_deltas, make_round_fn
+from repro.core.server import History, RoundRecord
+from repro.kernels.mixing.ops import aggregate_grouped, combine_weights
+from . import packing
+from .faults import FaultSpec, FaultTrace, sample_trace
+
+__all__ = ["STALENESS_KINDS", "StreamConfig", "StreamEngine",
+           "staleness_weight"]
+
+PyTree = Any
+
+STALENESS_KINDS = ("none", "poly", "exp")
+
+
+def staleness_weight(s: int, kind: str = "none",
+                     param: float = 0.5) -> float:
+    """Discount for an upload consumed ``s`` closures after dispatch.
+
+    ``none``: always 1.0.  ``poly``: ``(1 + s) ** -param`` (FedBuff's
+    polynomial discount).  ``exp``: ``param ** s``.  Every kind returns
+    exactly 1.0 at ``s = 0``, which is what makes the synchronous path
+    the bitwise-degenerate case (``x * 1.0 == x`` in IEEE arithmetic).
+    """
+    if kind not in STALENESS_KINDS:
+        raise ValueError(
+            f"staleness must be one of {STALENESS_KINDS}, got {kind!r}")
+    if s == 0 or kind == "none":
+        return 1.0
+    if kind == "poly":
+        return float((1.0 + s) ** (-param))
+    return float(param ** s)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """The semi-async server policy + the fault process driving it.
+
+    ``buffer``        close after this many buffered uploads (FedBuff
+                      ``b``); None = wait for the dispatching round's
+                      own full cohort (synchronous-style closure).
+    ``deadline``      max virtual time a round stays open after
+                      dispatch; arrivals after it wait for a later
+                      closure (and pick up staleness).
+    ``staleness``     discount kind ('none' | 'poly' | 'exp') with
+                      ``staleness_param`` (see ``staleness_weight``).
+    ``max_staleness`` uploads older than this many closures are
+                      discarded, not aggregated.
+    ``faults``        optional ``FaultSpec``; with ``fault_seed`` it
+                      fully determines the fault trajectory
+                      (``sample_trace``), so runs replay bitwise.
+    """
+    buffer: Optional[int] = None
+    deadline: float = math.inf
+    staleness: str = "none"
+    staleness_param: float = 0.5
+    max_staleness: int = 16
+    faults: Optional[FaultSpec] = None
+    fault_seed: int = 0
+
+    def __post_init__(self):
+        if self.buffer is not None and self.buffer < 1:
+            raise ValueError(f"buffer must be >= 1, got {self.buffer}")
+        if not self.deadline > 0:
+            raise ValueError(f"deadline must be > 0, got {self.deadline}")
+        if self.staleness not in STALENESS_KINDS:
+            raise ValueError(f"staleness must be one of "
+                             f"{STALENESS_KINDS}, got {self.staleness!r}")
+        if self.max_staleness < 0:
+            raise ValueError(
+                f"max_staleness must be >= 0, got {self.max_staleness}")
+
+
+@dataclasses.dataclass
+class _Cohort:
+    """One dispatched round still in flight: the params it trained from,
+    its lazily-computed payload, and who has not been consumed yet."""
+    t: int
+    snapshot: PyTree
+    pending: Dict[int, float]            # client -> absolute arrival time
+    expected: Set[int]                   # everyone the plan said uploads
+    payload: Any = None                  # packed bufs / delta tree (lazy)
+
+
+class StreamEngine:
+    """Event-driven single-host runtime (the ``Engine`` protocol).
+
+    Dispatches each plan round at the previous closure, buffers uploads
+    as they arrive in virtual time, and aggregates staleness-weighted
+    cohort slices.  A closure that consumes exactly its own fresh, full
+    cohort takes the *synchronous fast path* -- the identical jitted
+    round function ``LocalEngine`` runs -- so the no-fault case is
+    bitwise-equal to the synchronous engine by construction, not by
+    tolerance.
+
+    After ``execute``: ``last_trace`` holds the sampled ``FaultTrace``
+    (None without faults), ``last_realized_plan`` the plan actually run
+    (faults folded into ``active_t``/``arrival_t`` -- a replayable
+    artifact), ``last_closures`` the virtual closure times.
+    """
+
+    def __init__(self, loss_fn, cfg):
+        from .engine import resolve_backend
+        if cfg.mesh is not None:
+            raise ValueError("StreamEngine is single-host; cfg.mesh is "
+                             "unsupported")
+        if cfg.stream is None:
+            raise ValueError("StreamEngine requires cfg.stream "
+                             "(a StreamConfig)")
+        self.cfg = cfg
+        self.loss_fn = loss_fn
+        self.stream: StreamConfig = cfg.stream
+        self.backend = resolve_backend(cfg)
+        self.last_trace: Optional[FaultTrace] = None
+        self.last_realized_plan = None
+        self.last_closures: List[float] = []
+        self._spec = None        # packed-delta layout (set per execute)
+
+    # -- trace / plan preparation ------------------------------------------
+
+    def _apply_faults(self, plan):
+        S = self.stream
+        if S.faults is None:
+            return plan, None
+        partition = None
+        if S.faults.failures == "cluster":
+            if plan.topology is None:
+                raise ValueError(
+                    "failures='cluster' needs the plan's embedded "
+                    "topology spec for the cluster partition; plan has "
+                    "none")
+            partition = plan.topology.build().partition
+        trace = sample_trace(S.faults, n=plan.n_clients, K=plan.n_rounds,
+                             seed=S.fault_seed, partition=partition)
+        return plan.with_faults(trace), trace
+
+    # -- execution ----------------------------------------------------------
+
+    def execute(self, plan, params, batches, *, eval_fn=None, eval_every=1,
+                energy_ratio=0.1):
+        from .engine import _check_batches
+        _check_batches(plan, batches)
+        cfg, S = self.cfg, self.stream
+        plan, trace = self._apply_faults(plan)
+        self.last_trace = trace
+        self.last_realized_plan = plan
+        K, n = plan.n_rounds, plan.n_clients
+
+        arrival = (np.asarray(plan.arrival_t, np.float64)
+                   if plan.arrival_t is not None
+                   else np.zeros((K, n), np.float64))
+
+        A_seq = jnp.asarray(plan.A_t, jnp.float32)
+        tau_seq = jnp.asarray(plan.tau_t, jnp.float32)
+        m_seq = jnp.asarray(plan.m_t, jnp.float32)
+        eta_seq = jnp.asarray(plan.eta_t, jnp.float32)
+        active_seq = (jnp.asarray(plan.active_t, jnp.float32)
+                      if plan.has_dropout else None)
+
+        # the synchronous fast path runs THIS function -- the same one
+        # LocalEngine sequential execution runs, so a pristine closure
+        # is bitwise-identical to the synchronous round
+        round_fn = make_round_fn(self.loss_fn, jit=cfg.jit,
+                                 mixing_backend=self.backend,
+                                 chunk=cfg.chunk, interpret=cfg.interpret)
+
+        def _deltas(p, b, eta):
+            return client_deltas(self.loss_fn, p, b, eta)
+        deltas_fn = jax.jit(_deltas) if cfg.jit else _deltas
+
+        history = History(algorithm=plan.algorithm,
+                          ledger=CommLedger(energy_ratio=energy_ratio))
+        self._spec = None
+        cohorts: Dict[int, _Cohort] = {}
+        dup_events: List[float] = []    # pending duplicate arrival times
+        closures: List[float] = []
+        now = 0.0
+
+        for t in range(K):
+            # ---- dispatch round t at D_t = C_{t-1} -----------------------
+            up_row = plan.tau_t[t] * plan.active_t[t]
+            expected = {int(i) for i in np.flatnonzero(up_row > 0)}
+            lost = 0
+            pending: Dict[int, float] = {}
+            for i in expected:
+                delay = arrival[t, i]
+                if math.isfinite(delay):
+                    pending[i] = now + delay
+                    if trace is not None and trace.dup[t, i] > 0:
+                        dup_events.append(now + delay
+                                          + float(trace.dup_delay[t, i]))
+                else:       # plan says "uploads" but the delay is inf
+                    lost += 1
+            cohorts[t] = _Cohort(t=t, snapshot=params, pending=pending,
+                                 expected=expected)
+
+            # ---- evict over-stale cohorts (their uploads are dead) -------
+            for r in [r for r in cohorts if t - r > S.max_staleness]:
+                lost += len(cohorts[r].pending)
+                del cohorts[r]
+
+            # ---- closure time C_t ----------------------------------------
+            if S.buffer is None:
+                # synchronous-style: wait for round t's own full cohort
+                waits = sorted(cohorts[t].pending.values())
+            else:
+                # FedBuff: wait until b unconsumed uploads (any round)
+                # have landed; if fewer than b will ever arrive, wait
+                # for all of them (the deadline still caps the wait)
+                waits = sorted(a for c in cohorts.values()
+                               for a in c.pending.values())[:S.buffer]
+            target = max(waits[-1] if waits else now, now)
+            C_t = min(target, now + S.deadline)
+            deadline_hit = target > C_t
+
+            # ---- consume every arrival <= C_t ----------------------------
+            groups: List[Tuple[int, List[int], float]] = []
+            late = stale_sum = stale_max = 0
+            for r in sorted(cohorts):
+                c = cohorts[r]
+                idx = sorted(i for i, a in c.pending.items() if a <= C_t)
+                if not idx:
+                    continue
+                s = t - r
+                w = staleness_weight(s, S.staleness, S.staleness_param)
+                groups.append((r, idx, w))
+                for i in idx:
+                    del c.pending[i]
+                if s > 0:
+                    late += len(idx)
+                    stale_sum += s * len(idx)
+                    stale_max = max(stale_max, s)
+            accepted = sum(len(idx) for _, idx, _ in groups)
+            W = sum(w * len(idx) for _, idx, w in groups)
+            dup_n = sum(1 for a in dup_events if a <= C_t)
+            dup_events = [a for a in dup_events if a > C_t]
+
+            # ---- aggregate (graceful: zero survivors -> carry forward) ---
+            if accepted == 0:
+                pass                     # params unchanged, m_actual = 0
+            elif self._is_sync_closure(groups, cohorts, t):
+                args = (params, batches[t], A_seq[t], tau_seq[t],
+                        m_seq[t], eta_seq[t])
+                if active_seq is not None:
+                    args = args + (active_seq[t],)
+                params, _ = round_fn(*args)
+            else:
+                params = self._aggregate_groups(
+                    params, groups, cohorts, batches, deltas_fn,
+                    A_seq, tau_seq, eta_seq, active_seq, W, n)
+
+            for r in [r for r, c in cohorts.items() if not c.pending]:
+                del cohorts[r]
+
+            # ---- record --------------------------------------------------
+            rec = RoundRecord(
+                t=plan.t0 + t, m=int(plan.m_planned_t[t]),
+                m_actual=accepted,
+                psi_bound=float(plan.psi_bound_t[t]),
+                d2s=accepted + dup_n, d2d=int(plan.d2d_t[t]),
+                eta=float(plan.eta_t[t]))
+            if eval_fn is not None and (t % eval_every == 0 or t == K - 1):
+                rec.metrics = {k: float(v)
+                               for k, v in eval_fn(params).items()}
+            info: Dict[str, float] = {}
+            if deadline_hit:
+                info["deadline_hit"] = 1.0
+            if late:
+                info["late"] = float(late)
+                info["stale_max"] = float(stale_max)
+                info["stale_mean"] = stale_sum / late
+            if lost:
+                info["lost"] = float(lost)
+            if dup_n:
+                info["dup"] = float(dup_n)
+            if accepted and W != accepted:
+                info["m_weighted"] = float(W)
+            if accepted < int(plan.m_actual_t[t]):
+                info["shortfall"] = float(int(plan.m_actual_t[t])
+                                          - accepted)
+            if info:
+                rec.stream = info
+            history.records.append(rec)
+            history.ledger.add_round(d2s=rec.d2s, d2d=rec.d2d)
+            closures.append(C_t)
+            now = C_t
+
+        self.last_closures = closures
+        return params, history
+
+    # -- internals ----------------------------------------------------------
+
+    @staticmethod
+    def _is_sync_closure(groups, cohorts, t) -> bool:
+        """True iff this closure is a pristine synchronous round: exactly
+        one group, it is round ``t`` itself, at weight 1.0, covering the
+        full expected cohort, whose payload was never computed -- then
+        the globals it trained from ARE the current globals and the
+        jitted synchronous round function applies verbatim."""
+        if len(groups) != 1:
+            return False
+        r, idx, w = groups[0]
+        c = cohorts.get(t)
+        return (r == t and w == 1.0 and c is not None
+                and c.payload is None and set(idx) == c.expected)
+
+    def _aggregate_groups(self, params, groups, cohorts, batches,
+                          deltas_fn, A_seq, tau_seq, eta_seq, active_seq,
+                          W, n):
+        """The stale path: one combine-row aggregation per contributing
+        cohort, each against the params that cohort trained from, every
+        row divided by the shared weighted count ``W``, summed, and
+        applied to the globals in one epilogue."""
+        Wj = jnp.float32(W)
+        acc_rows = None                  # kernel path: per-group fp32 rows
+        acc_tree = None                  # einsum path: fp32 delta tree
+        for r, idx, w in groups:
+            c = cohorts[r]
+            if c.payload is None:
+                d = deltas_fn(c.snapshot, batches[r], eta_seq[r])
+                if self.backend == "einsum":
+                    c.payload = d
+                else:
+                    # one layout for the whole run (the param tree is
+                    # fixed); pack_spec caches per treedef anyway
+                    if self._spec is None:
+                        self._spec = packing.pack_spec(d)
+                    c.payload = packing.pack(d, self._spec)
+            u = np.zeros(n, np.float32)
+            u[idx] = 1.0
+            tau_u = tau_seq[r] * jnp.asarray(u)
+            act_r = active_seq[r] if active_seq is not None else None
+            wj = jnp.float32(w)
+            if self.backend == "einsum":
+                row = combine_weights(A_seq[r], tau_u, Wj, act_r, wj)
+                contrib = jax.tree.map(
+                    lambda dd: jnp.einsum("i,i...->...", row,
+                                          dd.astype(jnp.float32)),
+                    c.payload)
+                acc_tree = contrib if acc_tree is None else jax.tree.map(
+                    jnp.add, acc_tree, contrib)
+            else:
+                rows = aggregate_grouped(
+                    A_seq[r], tau_u, Wj, c.payload, chunk=self.cfg.chunk,
+                    interpret=self.cfg.interpret, active=act_r,
+                    weights=wj)
+                acc_rows = rows if acc_rows is None else tuple(
+                    a + b for a, b in zip(acc_rows, rows))
+        if self.backend == "einsum":
+            return jax.tree.map(lambda g, a: (g + a).astype(g.dtype),
+                                params, acc_tree)
+        return packing.apply_aggregate_row(params, acc_rows, self._spec)

@@ -66,7 +66,8 @@ def _pad_inputs(A, X, chunk):
 
 
 def combine_weights(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
-                    active: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+                    active: Optional[jnp.ndarray] = None,
+                    weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Precombined D2S weight row ``w = (tau^T A) / m`` (fp32, shape (n,)).
 
     The algebraic identity ``(1/m) sum_i tau_i (A X)_i = w @ X`` is what
@@ -81,11 +82,23 @@ def combine_weights(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
     already be the effective sampled-and-active count (the plan's
     renormalized ``m_t``).  An all-ones mask is bitwise-identical to
     passing ``active=None``.
+
+    ``weights`` is an optional per-upload discount (scalar or (n,) fp32,
+    e.g. the semi-async staleness weight): it scales the *upload* leg
+    only -- multiplied into ``tau``, never into the D2D contribution
+    columns -- matching the sampled-to-sampled framing in which a stale
+    client's own report is discounted but the fresh neighbor deltas it
+    relayed are not.  ``m`` must then be the weighted divisor (the sum of
+    accepted upload weights).  ``weights = 1.0`` is bitwise-identical to
+    passing ``weights=None`` (IEEE ``x * 1.0 == x``), so the synchronous
+    path is the exact degenerate case.
     """
     tau = tau.astype(jnp.float32)
     if active is not None:
         act = active.astype(jnp.float32)
         tau = tau * act
+    if weights is not None:
+        tau = tau * jnp.asarray(weights, jnp.float32)
     w = jnp.einsum("i,ij->j", tau, A.astype(jnp.float32),
                    preferred_element_type=jnp.float32) / m
     if active is not None:
@@ -93,10 +106,10 @@ def combine_weights(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
     return w
 
 
-def _weight_row(A, tau, m, n_pad, active=None):
+def _weight_row(A, tau, m, n_pad, active=None, weights=None):
     """``combine_weights`` padded to the sublane multiple with the real
     weights in row 0 (the layout the fused kernels consume)."""
-    w = combine_weights(A, tau, m, active)
+    w = combine_weights(A, tau, m, active, weights)
     n = w.shape[0]
     return jnp.zeros((_SUBLANE, n_pad), jnp.float32).at[0, :n].set(w)
 
@@ -132,7 +145,8 @@ def mix_pytree(A: jnp.ndarray, deltas: PyTree, *, chunk: int = 2048,
 def mix_aggregate(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
                   X: jnp.ndarray, *, chunk: int = 2048,
                   interpret: Optional[bool] = None,
-                  active: Optional[jnp.ndarray] = None
+                  active: Optional[jnp.ndarray] = None,
+                  weights: Optional[jnp.ndarray] = None
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused eq. 3 + eq. 4 over an arbitrary (n, p) payload.
 
@@ -140,14 +154,15 @@ def mix_aggregate(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
     aggregate row agg (p,) = ``(1/m) sum_i tau_i (A @ X)_i``, computed
     from one streaming pass over ``X``.
 
-    ``active`` folds a straggler mask into the aggregate row (see
-    ``combine_weights``); the *mixed* output reflects dropped clients
-    only if the caller already zeroed their rows of ``X`` (the payload
-    is streamed as given).
+    ``active`` folds a straggler mask into the aggregate row and
+    ``weights`` per-upload staleness discounts (see ``combine_weights``);
+    the *mixed* output reflects dropped clients only if the caller
+    already zeroed their rows of ``X`` (the payload is streamed as
+    given).
     """
     interpret = resolve_interpret(interpret)
     A_p, X_p, n, p = _pad_inputs(A, X, chunk)
-    w_p = _weight_row(A, tau, m, A_p.shape[0], active)
+    w_p = _weight_row(A, tau, m, A_p.shape[0], active, weights)
     mixed, agg = mix_aggregate_pallas(A_p, w_p, X_p, chunk=chunk,
                                       interpret=interpret)
     return mixed[:n, :p], agg[0, :p]
@@ -157,15 +172,17 @@ def mix_aggregate(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
 def aggregate(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
               X: jnp.ndarray, *, chunk: int = 2048,
               interpret: Optional[bool] = None,
-              active: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+              active: Optional[jnp.ndarray] = None,
+              weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Aggregate-only fast path: the float32 row
     ``(1/m) sum_i tau_i (A @ X)_i = ((tau^T A) / m) @ X`` (p,), reading
     ``X`` once and never materializing the mixed deltas.  A straggler
-    mask (``active``) costs nothing here: dropped clients are folded
-    into the combine row, the payload is untouched."""
+    mask (``active``) or staleness discount (``weights``) costs nothing
+    here: both are folded into the combine row, the payload is
+    untouched."""
     interpret = resolve_interpret(interpret)
     A_p, X_p, n, p = _pad_inputs(A, X, chunk)
-    w_p = _weight_row(A, tau, m, A_p.shape[0], active)
+    w_p = _weight_row(A, tau, m, A_p.shape[0], active, weights)
     agg = aggregate_pallas(w_p, X_p, chunk=chunk, interpret=interpret)
     return agg[0, :p]
 
@@ -176,7 +193,8 @@ def mix_aggregate_grouped(A: jnp.ndarray, tau: jnp.ndarray,
                           bufs: Tuple[jnp.ndarray, ...], *,
                           chunk: int = 2048,
                           interpret: Optional[bool] = None,
-                          active: Optional[jnp.ndarray] = None
+                          active: Optional[jnp.ndarray] = None,
+                          weights: Optional[jnp.ndarray] = None
                           ) -> Tuple[Tuple[jnp.ndarray, ...],
                                      Tuple[jnp.ndarray, ...]]:
     """Fused eq. 3 + eq. 4 over a dtype-grouped packed tree: one fused
@@ -188,7 +206,7 @@ def mix_aggregate_grouped(A: jnp.ndarray, tau: jnp.ndarray,
     for ``packing.unpack`` / ``packing.apply_aggregate_row``.
     """
     out = [mix_aggregate(A, tau, m, b, chunk=chunk, interpret=interpret,
-                         active=active)
+                         active=active, weights=weights)
            for b in bufs]
     return tuple(mb for mb, _ in out), tuple(r for _, r in out)
 
@@ -197,11 +215,12 @@ def mix_aggregate_grouped(A: jnp.ndarray, tau: jnp.ndarray,
 def aggregate_grouped(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
                       bufs: Tuple[jnp.ndarray, ...], *, chunk: int = 2048,
                       interpret: Optional[bool] = None,
-                      active: Optional[jnp.ndarray] = None
+                      active: Optional[jnp.ndarray] = None,
+                      weights: Optional[jnp.ndarray] = None
                       ) -> Tuple[jnp.ndarray, ...]:
     """Aggregate-only variant of ``mix_aggregate_grouped``: per-group
     fp32 rows ``((tau^T A) / m) @ X_g``, one launch per dtype group, the
     mixed deltas never materialized."""
     return tuple(aggregate(A, tau, m, b, chunk=chunk, interpret=interpret,
-                           active=active)
+                           active=active, weights=weights)
                  for b in bufs)

@@ -1,0 +1,213 @@
+"""FaultSpec / FaultTrace: validation, JSON exactness, replay
+determinism, and the delegation contract with the RoundPlan dropout
+transforms (one rng stream, bitwise)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import D2DNetwork, ServerConfig
+from repro.fl import (FaultSpec, FaultTrace, RoundPlan, parse_fault_spec,
+                      sample_trace)
+from repro.fl.faults import cluster_active, iid_active, markov_active
+
+
+def _plan(n=12, c=2, K=5, seed=3):
+    net = D2DNetwork(n=n, c=c, k_range=(4, 6), p_fail=0.1)
+    cfg = ServerConfig(T=3, t_max=K, phi_max=0.3, seed=seed,
+                       eta=lambda t: 0.2)
+    return RoundPlan.connectivity_aware(net, cfg)
+
+
+# ---------------------------------------------------------------------------
+# FaultSpec
+# ---------------------------------------------------------------------------
+
+def test_spec_defaults_fill_and_json_round_trip():
+    spec = FaultSpec(failures="markov", failure_params={"p_fail": 0.2},
+                     latency="exponential", duplicate_rate=0.05)
+    # missing params filled from defaults
+    assert spec.failure_params == {"p_fail": 0.2, "p_recover": 0.5}
+    assert spec.latency_params == {"mean": 0.5}
+    back = FaultSpec.from_json(spec.to_json())
+    assert back == spec
+    # payload is valid strict JSON (round-trips through plain json too)
+    assert json.loads(spec.to_json())["failures"] == "markov"
+
+
+def test_spec_equality_across_param_spelling():
+    a = FaultSpec(failures="iid", failure_params={"rate": 0.1})
+    b = FaultSpec(failures="iid")       # default rate == 0.1
+    assert a == b and hash(a) == hash(b)
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(failures="nope"),
+    dict(latency="nope"),
+    dict(failures="iid", failure_params={"rat": 0.1}),
+    dict(failures="iid", failure_params={"rate": 1.0}),
+    dict(failures="markov", failure_params={"p_fail": 1.5}),
+    dict(latency="uniform", latency_params={"lo": 2.0, "hi": 1.0}),
+    dict(latency="exponential", latency_params={"mean": 0.0}),
+    dict(duplicate_rate=-0.1),
+    dict(depart_rate=1.5),
+])
+def test_spec_validation(kwargs):
+    with pytest.raises(ValueError):
+        FaultSpec(**kwargs)
+
+
+def test_parse_fault_spec():
+    spec = parse_fault_spec(
+        "markov:p_fail=0.2,p_recover=0.6,latency=exponential,mean=0.7,"
+        "duplicate_rate=0.05,depart_rate=0.01")
+    assert spec == FaultSpec(
+        failures="markov",
+        failure_params={"p_fail": 0.2, "p_recover": 0.6},
+        latency="exponential", latency_params={"mean": 0.7},
+        duplicate_rate=0.05, depart_rate=0.01)
+    assert parse_fault_spec("none") == FaultSpec()
+    assert parse_fault_spec("iid:rate=0.3").failure_params["rate"] == 0.3
+    with pytest.raises(ValueError):
+        parse_fault_spec("iid:rate")        # not key=val
+
+
+# ---------------------------------------------------------------------------
+# sample_trace / FaultTrace
+# ---------------------------------------------------------------------------
+
+def test_trace_deterministic_and_json_exact():
+    spec = FaultSpec(failures="iid", failure_params={"rate": 0.2},
+                     latency="lognormal", duplicate_rate=0.1,
+                     depart_rate=0.05)
+    t1 = sample_trace(spec, n=10, K=8, seed=4)
+    t2 = sample_trace(spec, n=10, K=8, seed=4)
+    assert t1.allclose(t2)
+    assert t1.allclose(FaultTrace.from_json(t1.to_json()))
+    assert not t1.allclose(sample_trace(spec, n=10, K=8, seed=5))
+
+
+def test_trace_departures_are_permanent():
+    spec = FaultSpec(depart_rate=0.3)
+    tr = sample_trace(spec, n=20, K=10, seed=0)
+    act = tr.active
+    for i in range(20):
+        d = int(tr.depart_round[i])
+        if d < 10:
+            assert (act[d:, i] == 0).all()
+        assert (act[:d, i] == 1).all()      # failures='none' here
+
+
+def test_trace_arrival_inf_exactly_where_inactive():
+    spec = FaultSpec(failures="iid", failure_params={"rate": 0.4},
+                     latency="fixed", latency_params={"value": 0.3},
+                     depart_rate=0.1)
+    tr = sample_trace(spec, n=15, K=6, seed=1)
+    arr = tr.arrival
+    assert (np.isinf(arr) == (tr.active == 0)).all()
+    assert (arr[np.isfinite(arr)] == np.float32(0.3)).all()
+
+
+def test_cluster_failures_need_partition():
+    spec = FaultSpec(failures="cluster")
+    with pytest.raises(ValueError, match="partition"):
+        sample_trace(spec, n=10, K=4, seed=0)
+    part = [np.arange(5), np.arange(5, 10)]
+    tr = sample_trace(spec, n=10, K=4, seed=0, partition=part)
+    # whole clusters go down together
+    for t in range(4):
+        for verts in part:
+            vals = tr.up[t, verts]
+            assert (vals == vals[0]).all()
+
+
+# ---------------------------------------------------------------------------
+# Delegation: plan transforms and the fault layer share one rng stream
+# ---------------------------------------------------------------------------
+
+def test_with_dropout_delegates_bitwise():
+    plan = _plan()
+    K, n = plan.tau_t.shape
+    via_transform = plan.with_dropout(0.3, np.random.default_rng(9))
+    mask = iid_active(np.random.default_rng(9), K, n, 0.3)
+    np.testing.assert_array_equal(via_transform.active_t, mask)
+
+
+def test_with_markov_dropout_delegates_bitwise():
+    plan = _plan()
+    K, n = plan.tau_t.shape
+    via_transform = plan.with_markov_dropout(0.2, 0.5,
+                                             np.random.default_rng(9))
+    mask = markov_active(np.random.default_rng(9), K, n, 0.2, 0.5)
+    np.testing.assert_array_equal(via_transform.active_t, mask)
+
+
+def test_with_cluster_dropout_delegates_bitwise():
+    plan = _plan()
+    K, n = plan.tau_t.shape
+    part = plan.topology.build().partition
+    via_transform = plan.with_cluster_dropout(
+        0.3, np.random.default_rng(9), partition=part)
+    mask = cluster_active(np.random.default_rng(9), K, part, n, 0.3)
+    np.testing.assert_array_equal(via_transform.active_t, mask)
+
+
+def test_markov_trace_matches_plan_transform_masks():
+    """failures='markov' in a FaultSpec and with_markov_dropout on a plan
+    draw the same chains from the same seed."""
+    plan = _plan()
+    K, n = plan.tau_t.shape
+    spec = FaultSpec(failures="markov",
+                     failure_params={"p_fail": 0.25, "p_recover": 0.4})
+    tr = sample_trace(spec, n=n, K=K, seed=13)
+    via_transform = plan.with_markov_dropout(
+        0.25, 0.4, np.random.default_rng(13))
+    np.testing.assert_array_equal(tr.up, via_transform.active_t)
+
+
+# ---------------------------------------------------------------------------
+# plan.with_faults / arrival_t plumbing
+# ---------------------------------------------------------------------------
+
+def test_with_faults_composes_mask_and_attaches_arrivals():
+    plan = _plan()
+    spec = FaultSpec(failures="iid", failure_params={"rate": 0.3},
+                     latency="uniform",
+                     latency_params={"lo": 0.1, "hi": 0.9})
+    tr = sample_trace(spec, n=plan.n_clients, K=plan.n_rounds, seed=2)
+    out = plan.with_faults(tr)
+    np.testing.assert_array_equal(out.active_t, tr.active)
+    np.testing.assert_array_equal(out.arrival_t, tr.arrival)
+    # renormalized bookkeeping matches with_active semantics
+    ref = plan.with_active(tr.active)
+    np.testing.assert_array_equal(out.m_t, ref.m_t)
+    np.testing.assert_array_equal(out.d2s_t, ref.d2s_t)
+    np.testing.assert_array_equal(out.d2d_t, ref.d2d_t)
+
+
+def test_arrival_column_survives_json_slice_and_regenerate():
+    plan = _plan()
+    spec = FaultSpec(latency="exponential")
+    tr = sample_trace(spec, n=plan.n_clients, K=plan.n_rounds, seed=7)
+    faulty = plan.with_faults(tr)
+    back = RoundPlan.from_json(faulty.to_json())
+    assert back.allclose(faulty)
+    # a v2-style payload (no arrival_t key) still loads
+    d = json.loads(plan.to_json())
+    d.pop("arrival_t")
+    d["version"] = 2
+    assert RoundPlan.from_json(json.dumps(d)).allclose(plan)
+    # slicing carries the column, offsets intact
+    tail = faulty[2:]
+    np.testing.assert_array_equal(tail.arrival_t, faulty.arrival_t[2:])
+    # regenerate rebuilds columns and re-attaches arrivals
+    assert faulty.regenerate().allclose(faulty)
+
+
+def test_allclose_distinguishes_missing_optional_column():
+    plan = _plan()
+    spec = FaultSpec(latency="fixed")
+    tr = sample_trace(spec, n=plan.n_clients, K=plan.n_rounds, seed=0)
+    assert not plan.allclose(plan.with_faults(tr))
+    assert not plan.with_faults(tr).allclose(plan)

@@ -255,6 +255,71 @@ def test_server_dropout_plan_consistent_across_backends(backend, scan):
 
 
 # ---------------------------------------------------------------------------
+# zero-survivor round: when every client drops, the round is a no-op --
+# the eq.-4 divisor clamps to 1, the aggregate is exactly zero, params
+# carry forward bitwise, and the History records m_actual=0.  Pinned on
+# every mixing backend, sequential and scanned.  (The mesh analogue is
+# test_mesh_train_step_dropped_client_is_identity; the semi-async
+# analogue is the deadline-shortfall test in test_stream_engine.py.)
+# ---------------------------------------------------------------------------
+
+def _zero_survivor_plan():
+    net, cfg = _net_cfg(t_max=3)
+    plan = RoundPlan.connectivity_aware(net, cfg)
+    active = np.ones_like(plan.active_t)
+    active[1, :] = 0.0                      # everybody drops in round 1
+    plan = plan.with_active(active)
+    assert int(plan.m_actual_t[1]) == 0 and float(plan.m_t[1]) == 1.0
+    return net, cfg, plan
+
+
+@pytest.mark.parametrize("backend",
+                         ["einsum", "pallas", "fused", "aggregate"])
+@pytest.mark.parametrize("scan", [False, True])
+def test_zero_survivor_round_is_noop_every_backend(backend, scan):
+    net, cfg, plan = _zero_survivor_plan()
+
+    def run(p):
+        server = FederatedServer(net, quad_loss, {"x": jnp.zeros(4)},
+                                 _sampler(net.n, 4), cfg,
+                                 execution=ExecutionConfig(backend=backend,
+                                                           scan=scan))
+        hist = server.run(plan=p)
+        return server.params, hist
+
+    params_full, hist = run(plan)
+    # the dead round is recorded, finite, and free
+    rec = hist.records[1]
+    assert rec.m_actual == 0 and rec.d2s == 0
+    assert np.isfinite(np.asarray(params_full["x"])).all()
+    # params across the dead round are bitwise those of the truncated
+    # run: rounds 0..2 with round 1 dead == rounds {0, 2} never happen,
+    # so compare against stopping right before the dead round
+    params_head, _ = run(plan[:1])
+    params_resumed, _ = run(plan[:2])
+    np.testing.assert_array_equal(np.asarray(params_resumed["x"]),
+                                  np.asarray(params_head["x"]))
+
+
+def test_zero_survivor_round_backends_agree_bitwise():
+    """All backends produce the identical trajectory through a dead
+    round (the clamp-to-1 divisor is shared, not per-backend)."""
+    net, cfg, plan = _zero_survivor_plan()
+
+    def run(backend):
+        server = FederatedServer(net, quad_loss, {"x": jnp.zeros(4)},
+                                 _sampler(net.n, 4), cfg,
+                                 execution=ExecutionConfig(backend=backend))
+        server.run(plan=plan)
+        return np.asarray(server.params["x"])
+
+    ref = run("einsum")
+    for backend in ("pallas", "fused", "aggregate"):
+        np.testing.assert_allclose(run(backend), ref,
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # RoundPlan: constructors, transforms, serialization
 # ---------------------------------------------------------------------------
 
