@@ -35,6 +35,11 @@ replaced -- a bf16-majority tree ships ~0.5x the promoted bytes --
 and the numbers land in BENCH_mixing.json, where the CI baseline check
 pins them against regression.
 
+Sparse vs dense (``sparse_vs_dense_rows``): ELL gather / segment-sum
+mixing against the dense kernels on real block-diagonal topology
+matrices -- the A-operand footprint drops from O(n^2) to O(n d_max)
+(the ``bytes_A_*`` fields are informational, not baseline-gated).
+
 Plan overhead (``plan_overhead_rows``): host-side cost of the
 declarative trajectory object -- building a K-round
 ``RoundPlan.connectivity_aware`` (Algorithm 1's rule, all topology
@@ -54,11 +59,13 @@ import numpy as np
 
 from repro.fl import packing
 from repro.kernels.mixing.ops import (aggregate, aggregate_grouped, mix,
-                                      mix_aggregate)
+                                      mix_aggregate, sparse_aggregate,
+                                      sparse_mix)
 from repro.kernels.mixing.ref import mix_ref
 
 __all__ = ["run", "traffic_model", "mesh_traffic_model",
-           "grouped_payload_rows", "plan_overhead_rows"]
+           "grouped_payload_rows", "plan_overhead_rows",
+           "sparse_vs_dense_rows"]
 
 # launch count for the per-leaf psum schedule in the reported model: a
 # representative LM delta-tree leaf count (the packed fused_rs schedule
@@ -208,6 +215,71 @@ def plan_overhead_rows(quiet: bool = False):
     return rows
 
 
+def sparse_vs_dense_rows(quiet: bool = False):
+    """Sparse (ELL gather / segment-sum) vs dense mixing on real
+    block-diagonal topology matrices.
+
+    The A-operand bytes are the story: a cluster topology's equal-
+    neighbor matrix stores ``n * d_max`` entries in ELL form (int32
+    index + fp32 weight) against the dense ``n^2`` fp32 layout, so the
+    operand footprint scales O(n) instead of O(n^2) -- the ratio below
+    is n/(2 d_max) and grows without bound.  Wall times are interpret-
+    mode CPU and NOT baseline-gated (the new ``bytes_A_*`` fields are
+    informational, outside ``_BYTE_FIELDS``, so the committed gate is
+    untouched).
+    """
+    from repro import topology
+    from repro.core.adjacency import network_matrix, network_matrix_sparse
+
+    rows = []
+    for n, c, p in ((256, 32, 8_192), (1_024, 128, 2_048)):
+        model = topology.make_spec("k_regular", n=n, c=c).build()
+        rng = np.random.default_rng(0)
+        clusters = model.sample_sparse(rng, 0)
+        sp = network_matrix_sparse(clusters, n)
+        idx_np, w_np = sp.ell()
+        idx, w = jnp.asarray(idx_np), jnp.asarray(w_np)
+        A = jnp.asarray(network_matrix(
+            [g.dense() for g in clusters], n), jnp.float32)
+        np.testing.assert_array_equal(np.asarray(sp.dense()),
+                                      np.asarray(A))
+
+        rng2 = np.random.default_rng(1)
+        X = jnp.asarray(rng2.standard_normal((n, p)), jnp.float32)
+        tau = jnp.asarray(rng2.integers(0, 2, n), jnp.float32)
+        m = jnp.float32(max(1.0, float(tau.sum())))
+
+        np.testing.assert_allclose(np.asarray(sparse_mix(idx, w, X)),
+                                   np.asarray(mix(A, X)),
+                                   rtol=1e-4, atol=1e-4)
+
+        t_dense_mix = _time(lambda: mix(A, X))
+        t_sparse_mix = _time(lambda: sparse_mix(idx, w, X))
+        t_dense_agg = _time(lambda: aggregate(A, tau, m, X))
+        t_sparse_agg = _time(lambda: sparse_aggregate(idx, w, tau, m, X))
+
+        d_max = int(idx_np.shape[1])
+        bytes_dense = n * n * 4
+        bytes_ell = n * d_max * (4 + 4)
+        row = dict(kind="sparse_vs_dense", n=n, clusters=c, p=p,
+                   nnz=int(sp.nnz), d_max=d_max,
+                   bytes_A_dense=bytes_dense, bytes_A_ell=bytes_ell,
+                   A_operand_ratio=bytes_dense / bytes_ell,
+                   us_mix_dense_interp=t_dense_mix,
+                   us_mix_sparse_interp=t_sparse_mix,
+                   us_agg_dense_interp=t_dense_agg,
+                   us_agg_sparse_interp=t_sparse_agg)
+        rows.append(row)
+        if not quiet:
+            print(f"n={n:5d} c={c:4d} p={p:6d} d_max={d_max:2d} "
+                  f"A: dense={bytes_dense/1e6:8.3f}MB "
+                  f"ell={bytes_ell/1e6:8.3f}MB "
+                  f"(x{bytes_dense/bytes_ell:6.1f})  "
+                  f"mix {t_dense_mix:9.1f}us->{t_sparse_mix:9.1f}us  "
+                  f"agg {t_dense_agg:9.1f}us->{t_sparse_agg:9.1f}us")
+    return rows
+
+
 def run(quiet: bool = False):
     rng = np.random.default_rng(0)
     rows = []
@@ -279,6 +351,10 @@ def run(quiet: bool = False):
         print("\nper-dtype grouped packing: measured payload bytes vs the "
               "promoted one-buffer layout")
     rows.extend(grouped_payload_rows(quiet=quiet))
+    if not quiet:
+        print("\nsparse vs dense mixing on block-diagonal topology "
+              "matrices (ELL A-operand bytes vs the (n, n) layout)")
+    rows.extend(sparse_vs_dense_rows(quiet=quiet))
     if not quiet:
         print("\nhost-side RoundPlan overhead (build + JSON round-trip)")
     rows.extend(plan_overhead_rows(quiet=quiet))

@@ -56,6 +56,8 @@ def _row_key(row):
         return ("grouped_payload", row.get("layout"), row.get("n"))
     if row.get("kind") == "plan_overhead":
         return ("plan_overhead", row.get("n"), row.get("rounds"))
+    if row.get("kind") == "sparse_vs_dense":
+        return ("sparse_vs_dense", row.get("n"), row.get("p"))
     return ("kernel", row.get("n"), row.get("p"), row.get("dtype"))
 
 

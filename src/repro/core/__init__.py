@@ -15,13 +15,16 @@ directed D2D cluster networks:
 """
 
 from .adjacency import (block_diagonal, equal_neighbor_matrix,
-                        is_column_stochastic, network_matrix, phi_ell,
+                        is_column_stochastic, network_matrix,
+                        network_matrix_sparse, phi_ell,
                         top_singular_values)
 from .bounds import (connectivity_factor, exact_phi_ell, psi_ell_from_stats,
                      psi_general, psi_regular, psi_total)
 from .graphs import (ClusterGraph, D2DNetwork, DegreeStats,
-                     delete_edge_fraction, degree_stats,
+                     SparseClusterGraph, delete_edge_fraction,
+                     degree_stats, degree_stats_from_arrays,
                      ensure_positive_out_degree, k_regular_digraph)
+from .sparse import SparseA, SparseAseq, ell_from_dense
 from .metrics import CommLedger, count_d2d_transmissions
 from .rounds import (MIXING_BACKENDS, client_deltas, fused_mix_update,
                      global_update, local_sgd, make_round_fn,

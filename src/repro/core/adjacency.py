@@ -15,12 +15,14 @@ from typing import List, Sequence, Tuple
 
 import numpy as np
 
-from .graphs import ClusterGraph
+from .graphs import ClusterGraph, SparseClusterGraph
+from .sparse import SparseA
 
 __all__ = [
     "equal_neighbor_matrix",
     "block_diagonal",
     "network_matrix",
+    "network_matrix_sparse",
     "top_singular_values",
     "phi_ell",
     "is_column_stochastic",
@@ -56,6 +58,41 @@ def network_matrix(clusters: Sequence[ClusterGraph], n: int) -> np.ndarray:
         block = equal_neighbor_matrix(cg.W)
         A[np.ix_(cg.vertices, cg.vertices)] = block
     return A
+
+
+def network_matrix_sparse(clusters: Sequence[SparseClusterGraph],
+                          n: int) -> SparseA:
+    """Sparse network-wide A(t) in global client indexing.
+
+    The equal-neighbor rule ``A[i, j] = W[j, i] / d_j^+`` turns each
+    cluster's CSR out-edge list (row j -> targets i) into destination-row
+    entries directly; total work is O(nnz), and nothing ``(n, n)`` is
+    ever allocated.  ``network_matrix(...)`` on the densified clusters
+    produces the exact same values (pinned in tests/test_sparse.py).
+    """
+    dsts: List[np.ndarray] = []
+    srcs: List[np.ndarray] = []
+    wts: List[np.ndarray] = []
+    for cg in clusters:
+        d_out = cg.d_out
+        if (d_out <= 0).any():
+            raise ValueError(
+                "equal-neighbor matrix needs positive out-degrees")
+        verts = np.asarray(cg.vertices)
+        src_local = np.repeat(np.arange(cg.size), d_out)
+        dsts.append(verts[cg.indices])
+        srcs.append(verts[src_local])
+        # float64 division then f32 cast, matching the dense pipeline
+        # (network_matrix computes in f64, plan columns store f32)
+        wts.append((1.0 / d_out[src_local]).astype(np.float32))
+    if dsts:
+        dst = np.concatenate(dsts)
+        src = np.concatenate(srcs)
+        data = np.concatenate(wts)
+    else:
+        dst = src = np.array([], dtype=np.int64)
+        data = np.array([], dtype=np.float32)
+    return SparseA.from_edges(n, dst, src, data)
 
 
 def top_singular_values(A: np.ndarray, k: int = 2) -> np.ndarray:

@@ -37,6 +37,16 @@ backends (``make_round_fn(..., mixing_backend=...)``):
               in their place (~3x less payload traffic than two-pass; see
               BENCH_mixing.json).  The ``FederatedServer`` selects this
               automatically when nothing records per-client mixed deltas.
+  'sparse' / 'sparse_aggregate' -- the ELL (neighbor-list) backends: ``A``
+              arrives as the 2-tuple ``(idx, w)`` of (n, d_max) arrays
+              (``repro.core.sparse.SparseA.ell()``) instead of an (n, n)
+              matrix, and eq. 3 runs as d_max row gathers while the eq.-4
+              combine row is a segment-sum over the same entries
+              (``kernels.mixing.sparse``).  O(n d_max p) work and O(n
+              d_max) topology storage -- the only backends that scale n
+              past the dense O(n^2) wall.  allclose (not bitwise) to
+              'einsum': fp32 accumulation both sides, reduction order
+              differs.
 
 ``make_scanned_rounds`` wraps the round in ``jax.lax.scan`` over stacked
 ``(A_t, tau_t, m_t, eta_t[, active_t])`` sequences so a K-round
@@ -78,7 +88,8 @@ __all__ = [
 PyTree = Any
 LossFn = Callable[[PyTree, PyTree], jnp.ndarray]  # (params, batch) -> scalar
 
-MIXING_BACKENDS = ("einsum", "pallas", "fused", "aggregate")
+MIXING_BACKENDS = ("einsum", "pallas", "fused", "aggregate", "sparse",
+                   "sparse_aggregate")
 
 
 def local_sgd(loss_fn: LossFn, params: PyTree, batches: PyTree,
@@ -220,6 +231,29 @@ def _mix_and_update(global_params, deltas, A, tau, m, *, mixing_backend,
                                      interpret=interpret, active=active)
         return packing.apply_aggregate_row(global_params, agg_rows,
                                            spec), None
+    if mixing_backend in ("sparse", "sparse_aggregate"):
+        from repro.fl import packing
+        from repro.kernels.mixing.ops import (sparse_aggregate_grouped,
+                                              sparse_mix_aggregate_grouped)
+
+        idx, w = A      # ELL pair (n, d_max), never an (n, n) matrix
+        spec = packing.pack_spec(deltas)
+        bufs = packing.pack(deltas, spec)
+        if mixing_backend == "sparse_aggregate":
+            agg_rows = sparse_aggregate_grouped(idx, w, tau, m, bufs,
+                                                chunk=chunk,
+                                                interpret=interpret,
+                                                active=active)
+            return packing.apply_aggregate_row(global_params, agg_rows,
+                                               spec), None
+        if active is not None:
+            bufs = tuple(mask_clients(list(bufs), active))
+        mixed_bufs, agg_rows = sparse_mix_aggregate_grouped(
+            idx, w, tau, m, bufs, chunk=chunk, interpret=interpret,
+            active=active)
+        mixed = packing.unpack(mixed_bufs, spec)
+        return packing.apply_aggregate_row(global_params, agg_rows,
+                                           spec), mixed
     raise ValueError(
         f"mixing_backend must be one of {MIXING_BACKENDS}, "
         f"got {mixing_backend!r}")
@@ -233,7 +267,9 @@ def make_round_fn(loss_fn: LossFn, jit: bool = True,
     Signature: ``round_fn(global_params, client_batches, A, tau, m, eta[,
     active])``
       - client_batches leaves: (n, T, ...) -- T local minibatches per client
-      - A: (n, n) runtime equal-neighbor matrix
+      - A: (n, n) runtime equal-neighbor matrix; the sparse backends take
+        the ELL pair ``(idx, w)`` of (n, d_max) arrays instead
+        (``repro.core.sparse.SparseA.ell()``)
       - tau: (n,) 0/1 sampling indicators; m = tau.sum() (passed explicitly)
       - active: optional (n,) 0/1 straggler mask; ``m`` must then be the
         effective sampled-and-active count (module docstring)
@@ -279,7 +315,10 @@ def make_scanned_rounds(loss_fn: LossFn, K: int, jit: bool = True,
     eta_seq[, active_seq]) -> (final_params, params_seq)``
 
       - client_batches_seq leaves: (K, n, T, ...) -- stacked round batches
-      - A_seq (K, n, n), tau_seq (K, n), m_seq (K,), eta_seq (K,)
+      - A_seq (K, n, n), tau_seq (K, n), m_seq (K,), eta_seq (K,); sparse
+        backends take ``A_seq = (idx_seq, w_seq)`` of (K, n, d_max) arrays
+        (``SparseAseq.ell()``, shared d_max so the scan keeps one compiled
+        shape) -- ``lax.scan`` slices the tuple leaves per round
       - active_seq: optional (K, n) stacked straggler masks (the
         ``RoundPlan`` ``active_t`` column)
       - params_seq leaves: (K, ...) -- the global params after each round

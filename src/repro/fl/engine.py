@@ -24,13 +24,20 @@ Backend selection (one matrix, one place)::
     runtime      backends                       record_mixed     scan
     -----------  -----------------------------  ---------------  ----
     LocalEngine  einsum | pallas | fused        False upgrades    yes
-                 | aggregate                    pallas/fused ->
-                                                'aggregate'
+                 | aggregate | sparse           pallas/fused ->
+                 | sparse_aggregate             'aggregate' and
+                                                sparse ->
+                                                'sparse_aggregate'
     MeshEngine   ring | gather | einsum         unsupported       yes
                  | fused | fused_rs
     StreamEngine einsum | pallas | fused        unsupported       no
                  | aggregate (pallas/fused      (mixed deltas     (event
-                 always -> 'aggregate')         never kept)       loop)
+                 always -> 'aggregate';         never kept)       loop)
+                 sparse* rejected)
+
+The sparse backends consume the plan's ``A_t`` column in ELL form
+(``repro.core.sparse``) -- a sparse plan never densifies on this path,
+which is what lets ``n`` scale past the dense O(n^2) wall.
 
 Straggler masks: when ``plan.has_dropout`` the per-round ``active_t``
 column is threaded into the round functions (inactive clients contribute
@@ -51,6 +58,7 @@ from repro.core.metrics import CommLedger
 from repro.core.rounds import MIXING_BACKENDS, make_round_fn, \
     make_scanned_rounds
 from repro.core.server import History, RoundRecord
+from repro.core.sparse import SparseAseq
 from .distributed import MIXINGS, make_scanned_train_steps, make_train_step
 from .plan import RoundPlan
 
@@ -110,6 +118,11 @@ def resolve_backend(cfg: ExecutionConfig) -> str:
             raise ValueError(
                 f"mixing_backend must be one of {MIXING_BACKENDS}, "
                 f"got {cfg.backend!r}")
+        if cfg.backend in ("sparse", "sparse_aggregate"):
+            raise ValueError(
+                "the sparse backends are not supported on the stream "
+                "runtime: cohort closure slices dense A_t rows; use "
+                "LocalEngine (backend='sparse') or densify the plan")
         # stale cohorts always take the aggregate-only combine-row path
         if cfg.backend in ("pallas", "fused"):
             return "aggregate"
@@ -128,15 +141,18 @@ def resolve_backend(cfg: ExecutionConfig) -> str:
         raise ValueError(
             f"mixing_backend must be one of {MIXING_BACKENDS}, "
             f"got {cfg.backend!r}")
-    if cfg.record_mixed and cfg.backend == "aggregate":
+    if cfg.record_mixed and cfg.backend in ("aggregate",
+                                            "sparse_aggregate"):
         raise ValueError(
-            "record_mixed=True contradicts the 'aggregate' backend, "
+            f"record_mixed=True contradicts the {cfg.backend!r} backend, "
             "which never materializes mixed deltas")
     # History never records per-client mixed deltas, so unless the caller
     # explicitly keeps them, the kernel backends dispatch the
     # aggregate-only fast path (~3x less payload traffic).
     if not cfg.record_mixed and cfg.backend in ("pallas", "fused"):
         return "aggregate"
+    if not cfg.record_mixed and cfg.backend == "sparse":
+        return "sparse_aggregate"
     return cfg.backend
 
 
@@ -159,11 +175,25 @@ class Engine(Protocol):
         ...
 
 
-def _device_columns(plan: RoundPlan):
+def _device_columns(plan: RoundPlan, sparse: bool = False):
     """Plan columns as stacked device arrays (the scan inputs; sequential
     execution indexes into them, which keeps the per-round values
-    identical across both drivers)."""
-    A_seq = jnp.asarray(plan.A_t, jnp.float32)
+    identical across both drivers).
+
+    ``sparse=True`` (the ELL backends) yields ``A_seq`` as the 2-tuple
+    ``(idx_seq, w_seq)`` of (K, n, d_max) device arrays -- straight from
+    a sparse plan without densifying, converted O(nnz)-wise from a dense
+    one.  Dense backends on a sparse plan densify per round (small-n
+    parity testing); at scale, keep representation and backend aligned.
+    """
+    if sparse:
+        A = plan.A_t if plan.is_sparse else SparseAseq.from_dense(plan.A_t)
+        idx_seq, w_seq = A.ell()
+        A_seq = (jnp.asarray(idx_seq), jnp.asarray(w_seq))
+    elif plan.is_sparse:
+        A_seq = jnp.asarray(plan.A_t.dense(), jnp.float32)
+    else:
+        A_seq = jnp.asarray(plan.A_t, jnp.float32)
     tau_seq = jnp.asarray(plan.tau_t, jnp.float32)
     m_seq = jnp.asarray(plan.m_t, jnp.float32)
     eta_seq = jnp.asarray(plan.eta_t, jnp.float32)
@@ -232,7 +262,9 @@ class LocalEngine:
         _check_batches(plan, batches)
         cfg = self.cfg
         K = plan.n_rounds
-        A_seq, tau_seq, m_seq, eta_seq, active_seq = _device_columns(plan)
+        sparse = self.backend in ("sparse", "sparse_aggregate")
+        A_seq, tau_seq, m_seq, eta_seq, active_seq = _device_columns(
+            plan, sparse=sparse)
         history = History(algorithm=plan.algorithm,
                           ledger=CommLedger(energy_ratio=energy_ratio))
 
@@ -253,7 +285,8 @@ class LocalEngine:
                                  mixing_backend=self.backend,
                                  chunk=cfg.chunk, interpret=cfg.interpret)
         for t in range(K):
-            args = (params, batches[t], A_seq[t], tau_seq[t], m_seq[t],
+            A_arg = ((A_seq[0][t], A_seq[1][t]) if sparse else A_seq[t])
+            args = (params, batches[t], A_arg, tau_seq[t], m_seq[t],
                     eta_seq[t])
             if active_seq is not None:
                 args = args + (active_seq[t],)

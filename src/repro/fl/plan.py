@@ -12,7 +12,16 @@ diffable artifact.
 
 Columns (K = number of rounds, n = number of clients):
 
-    A_t        (K, n, n) f32  equal-neighbor mixing matrices (eq. 2-3)
+    A_t        (K, n, n) f32  equal-neighbor mixing matrices (eq. 2-3);
+                              EITHER a dense ndarray OR a
+                              ``repro.core.sparse.SparseAseq`` (CSR per
+                              round) -- the sparse form stores O(nnz)
+                              instead of O(K n^2), so plans at
+                              n = 100_000 build and serialize without
+                              ever allocating an (n, n) array.  Build
+                              one with ``sparse=True`` on any
+                              constructor, or convert with
+                              ``sparsify()``/``densify()``.
     tau_t      (K, n)    f32  0/1 PS sampling indicators (Sec. 3.3)
     m_t        (K,)      f64  eq.-4 divisor: the *effective* number of
                               sampled-and-active clients (clamped >= 1)
@@ -82,10 +91,12 @@ from typing import Iterator, Optional, Sequence, Union
 import numpy as np
 
 from repro.core import sampling
-from repro.core.adjacency import network_matrix
+from repro.core.adjacency import network_matrix, network_matrix_sparse
 from repro.core.bounds import exact_phi_ell, phi_ell_bound_from_stats, \
     psi_total
+from repro.core.graphs import SparseClusterGraph
 from repro.core.metrics import count_d2d_transmissions
+from repro.core.sparse import SparseA, SparseAseq
 from repro.topology import TopologySpec
 
 from . import faults as _faults
@@ -94,9 +105,10 @@ __all__ = ["ALGORITHMS", "PlanRow", "RoundPlan", "plan_rows"]
 
 ALGORITHMS = ("semidec", "fedavg", "colrel")
 
-_JSON_VERSION = 3
-# v1: pre-topology plans (no embedded spec); v2: no arrival_t column
-_JSON_SUPPORTED = (1, 2, 3)
+_JSON_VERSION = 4
+# v1: pre-topology plans (no embedded spec); v2: no arrival_t column;
+# v3: dense-only A_t
+_JSON_SUPPORTED = (1, 2, 3, 4)
 
 
 def _sample_snapshot(network, rng, t):
@@ -114,11 +126,23 @@ def _sample_snapshot(network, rng, t):
     return sample(rng)
 
 
+def _sample_snapshot_sparse(network, rng, t):
+    """Sparse cluster snapshot: ``sample_sparse`` when the model provides
+    it (every ``ClusteredTopology``; identical rng consumption to
+    ``sample``), else the dense snapshot converted per cluster -- (s, s)
+    scratch per cluster, never anything (n, n)."""
+    sample = getattr(network, "sample_sparse", None)
+    if sample is not None:
+        return sample(rng, t)
+    return [SparseClusterGraph.from_dense(c.vertices, c.W)
+            for c in _sample_snapshot(network, rng, t)]
+
+
 @dataclasses.dataclass(frozen=True)
 class PlanRow:
     """One global round of a trajectory (host-side, numpy)."""
     t: int
-    A: np.ndarray             # (n, n) float32
+    A: Union[np.ndarray, SparseA]   # (n, n) float32 dense, or CSR
     tau: np.ndarray           # (n,)   float32
     m: float                  # eq.-4 divisor (effective sample count)
     eta: float
@@ -138,8 +162,8 @@ def _check_algorithm(algorithm: str, m_fixed) -> None:
 
 
 def plan_rows(network, config, algorithm: str = "semidec",
-              rng: Optional[np.random.Generator] = None
-              ) -> Iterator[PlanRow]:
+              rng: Optional[np.random.Generator] = None, *,
+              sparse: bool = False) -> Iterator[PlanRow]:
     """Generate per-round plan rows for ``network`` under ``config``.
 
     Replicates the legacy server loop exactly -- including rng
@@ -148,6 +172,16 @@ def plan_rows(network, config, algorithm: str = "semidec",
     draws on a shared generator reproduces pre-RoundPlan trajectories
     bitwise.  Yields forever; take ``config.t_max`` rows (the
     ``RoundPlan`` constructors do).
+
+    ``sparse=True`` emits rows whose ``A`` is a ``SparseA`` (CSR) built
+    by ``network_matrix_sparse`` -- no (n, n) array anywhere on the
+    planning path: D2D counts come off the CSR edge lists and the
+    ``bound_kind`` degree-stat bounds are computed from the degree
+    arrays alone (``SparseClusterGraph.stats``); ``bound_kind='exact'``
+    still densifies each (s, s) cluster block (SVD needs the matrix),
+    never the network.  The rng stream is consumed identically to the
+    dense path, so tau/m/eta/bookkeeping columns match it bitwise and
+    the ``A`` values match exactly.
     """
     _check_algorithm(algorithm, config.m_fixed)
     if rng is None:
@@ -159,12 +193,18 @@ def plan_rows(network, config, algorithm: str = "semidec",
     while True:
         uses_d2d = algorithm in ("semidec", "colrel")
         if uses_d2d:
-            clusters = _sample_snapshot(network, rng, t)
-            A = network_matrix(clusters, n)
-            d2d = sum(count_d2d_transmissions(c.W) for c in clusters)
+            if sparse:
+                clusters = _sample_snapshot_sparse(network, rng, t)
+                A = network_matrix_sparse(clusters, n)
+                d2d = sum(c.d2d_transmissions for c in clusters)
+            else:
+                clusters = _sample_snapshot(network, rng, t)
+                A = np.asarray(network_matrix(clusters, n), np.float32)
+                d2d = sum(count_d2d_transmissions(c.W) for c in clusters)
         else:
             clusters = None
-            A = np.eye(n)
+            A = SparseA.identity(n) if sparse else \
+                np.eye(n, dtype=np.float32)
             d2d = 0
 
         psi_bound = float("nan")
@@ -186,7 +226,7 @@ def plan_rows(network, config, algorithm: str = "semidec",
         vertex_sets = ([c.vertices for c in clusters]
                        if clusters is not None else network.partition)
         tau, m_actual = sampling.sample_clients(rng, vertex_sets, m, n)
-        yield PlanRow(t=t, A=np.asarray(A, np.float32),
+        yield PlanRow(t=t, A=A,
                       tau=np.asarray(tau, np.float32),
                       m=float(m_actual), eta=float(config.eta(t)),
                       active=np.ones(n, np.float32),
@@ -205,7 +245,7 @@ class RoundPlan:
     the device never sees planning logic, only arrays.
     """
     algorithm: str
-    A_t: np.ndarray            # (K, n, n) float32
+    A_t: Union[np.ndarray, SparseAseq]   # (K, n, n) f32 dense, or CSR
     tau_t: np.ndarray          # (K, n)    float32
     m_t: np.ndarray            # (K,)      float64
     eta_t: np.ndarray          # (K,)      float64
@@ -257,6 +297,11 @@ class RoundPlan:
     @property
     def n_clients(self) -> int:
         return int(self.A_t.shape[-1])
+
+    @property
+    def is_sparse(self) -> bool:
+        """True iff ``A_t`` is held in CSR form (``SparseAseq``)."""
+        return isinstance(self.A_t, SparseAseq)
 
     @property
     def has_dropout(self) -> bool:
@@ -315,12 +360,21 @@ class RoundPlan:
     def from_rows(cls, rows: Sequence[PlanRow], algorithm: str = "semidec",
                   topology: Optional[TopologySpec] = None,
                   seed: Optional[int] = None) -> "RoundPlan":
-        """Stack explicit per-round rows into a plan (any trajectory)."""
+        """Stack explicit per-round rows into a plan (any trajectory).
+        Rows carrying ``SparseA`` matrices stack into a sparse plan."""
         if not rows:
             raise ValueError("from_rows: need at least one round")
+        if any(isinstance(r.A, SparseA) for r in rows):
+            if not all(isinstance(r.A, SparseA) for r in rows):
+                raise ValueError(
+                    "from_rows: all rows must share one A representation "
+                    "(got a mix of dense and SparseA)")
+            A_t = SparseAseq([r.A for r in rows])
+        else:
+            A_t = np.stack([np.asarray(r.A, np.float32) for r in rows])
         return cls(
             algorithm=algorithm,
-            A_t=np.stack([np.asarray(r.A, np.float32) for r in rows]),
+            A_t=A_t,
             tau_t=np.stack([np.asarray(r.tau, np.float32) for r in rows]),
             m_t=np.asarray([r.m for r in rows], np.float64),
             eta_t=np.asarray([r.eta for r in rows], np.float64),
@@ -336,7 +390,8 @@ class RoundPlan:
 
     @classmethod
     def _planned(cls, network, config, algorithm,
-                 rng: Optional[np.random.Generator]) -> "RoundPlan":
+                 rng: Optional[np.random.Generator],
+                 sparse: bool = False) -> "RoundPlan":
         # provenance: the spec always rides along when the network has
         # one; the seed only when planning owned the rng stream (an
         # external generator may have unknown prior state, so the plan
@@ -344,28 +399,32 @@ class RoundPlan:
         spec = getattr(network, "spec", None)
         spec = spec if isinstance(spec, TopologySpec) else None
         seed = int(config.seed) if rng is None else None
-        gen = plan_rows(network, config, algorithm, rng)
+        gen = plan_rows(network, config, algorithm, rng, sparse=sparse)
         return cls.from_rows([next(gen) for _ in range(config.t_max)],
                              algorithm=algorithm, topology=spec, seed=seed)
 
     @classmethod
     def connectivity_aware(cls, network, config,
-                           rng: Optional[np.random.Generator] = None
-                           ) -> "RoundPlan":
-        """Algorithm 1: time-varying D2D mixing + the eq.-7 m(t) rule."""
-        return cls._planned(network, config, "semidec", rng)
+                           rng: Optional[np.random.Generator] = None,
+                           *, sparse: bool = False) -> "RoundPlan":
+        """Algorithm 1: time-varying D2D mixing + the eq.-7 m(t) rule.
+        ``sparse=True`` plans in CSR -- O(nnz) memory, same rng stream
+        (see ``plan_rows``)."""
+        return cls._planned(network, config, "semidec", rng, sparse)
 
     @classmethod
     def fedavg(cls, network, config,
-               rng: Optional[np.random.Generator] = None) -> "RoundPlan":
+               rng: Optional[np.random.Generator] = None,
+               *, sparse: bool = False) -> "RoundPlan":
         """McMahan et al.: no D2D (A = I), fixed ``config.m_fixed``."""
-        return cls._planned(network, config, "fedavg", rng)
+        return cls._planned(network, config, "fedavg", rng, sparse)
 
     @classmethod
     def colrel(cls, network, config,
-               rng: Optional[np.random.Generator] = None) -> "RoundPlan":
+               rng: Optional[np.random.Generator] = None,
+               *, sparse: bool = False) -> "RoundPlan":
         """Yemini et al.: one D2D aggregation per round, fixed m."""
-        return cls._planned(network, config, "colrel", rng)
+        return cls._planned(network, config, "colrel", rng, sparse)
 
     # -- straggler transforms ----------------------------------------------
 
@@ -392,11 +451,18 @@ class RoundPlan:
         eff = (self.tau_t * active_t).sum(axis=1)
         # A_t[i, j] != 0 iff client j transmits to i; off-diagonal
         # entries in a dropped client's column are transmissions that
-        # never happen.
-        off_diag = (self.A_t != 0.0) \
-            & ~np.eye(self.n_clients, dtype=bool)[None]
-        dropped_tx = (off_diag * (active_t == 0.0)[:, None, :]) \
-            .sum(axis=(1, 2))
+        # never happen.  The sparse branch counts the same entries off
+        # the CSR edge lists -- O(nnz), never densifying.
+        if self.is_sparse:
+            dropped_tx = np.asarray(
+                [((m.data != 0.0) & (active_t[t][m.indices] == 0.0)
+                  & (m.row_ids() != m.indices)).sum()
+                 for t, m in enumerate(self.A_t)], np.int64)
+        else:
+            off_diag = (self.A_t != 0.0) \
+                & ~np.eye(self.n_clients, dtype=bool)[None]
+            dropped_tx = (off_diag * (active_t == 0.0)[:, None, :]) \
+                .sum(axis=(1, 2))
         return dataclasses.replace(
             self, active_t=active_t,
             m_t=np.maximum(eff, 1.0).astype(np.float64),
@@ -520,17 +586,25 @@ class RoundPlan:
         rows = []
         for t in range(self.n_rounds):
             if uses_d2d:
-                clusters = model.sample(rng, t)
-                A = network_matrix(clusters, n)
-                d2d = sum(count_d2d_transmissions(c.W) for c in clusters)
+                if self.is_sparse:
+                    clusters = _sample_snapshot_sparse(model, rng, t)
+                    A = network_matrix_sparse(clusters, n)
+                    d2d = sum(c.d2d_transmissions for c in clusters)
+                else:
+                    clusters = model.sample(rng, t)
+                    A = np.asarray(network_matrix(clusters, n), np.float32)
+                    d2d = sum(count_d2d_transmissions(c.W)
+                              for c in clusters)
                 vertex_sets = [c.vertices for c in clusters]
             else:
-                A, d2d = np.eye(n), 0
+                A = (SparseA.identity(n) if self.is_sparse
+                     else np.eye(n, dtype=np.float32))
+                d2d = 0
                 vertex_sets = model.partition
             m = int(self.m_planned_t[t])
             tau, m_actual = sampling.sample_clients(rng, vertex_sets, m, n)
             rows.append(PlanRow(
-                t=t, A=np.asarray(A, np.float32),
+                t=t, A=A,
                 tau=np.asarray(tau, np.float32), m=float(m_actual),
                 eta=float(self.eta_t[t]), active=np.ones(n, np.float32),
                 m_planned=m, m_actual=int(m_actual), d2s=int(m_actual),
@@ -540,6 +614,25 @@ class RoundPlan:
         if self.has_dropout:
             base = base.with_active(self.active_t)
         return base.with_arrivals(self.arrival_t)
+
+    # -- representation conversions -----------------------------------------
+
+    def sparsify(self) -> "RoundPlan":
+        """The same plan with ``A_t`` in CSR form (no-op if already
+        sparse).  ``sparsify().densify()`` is bitwise-identical to the
+        dense original: CSR stores exactly the nonzero f32 entries."""
+        if self.is_sparse:
+            return self
+        return dataclasses.replace(self,
+                                   A_t=SparseAseq.from_dense(self.A_t))
+
+    def densify(self) -> "RoundPlan":
+        """The same plan with ``A_t`` as a dense (K, n, n) ndarray
+        (no-op if already dense).  Small-n parity testing only -- this
+        is the O(n^2) allocation the sparse path exists to avoid."""
+        if not self.is_sparse:
+            return self
+        return dataclasses.replace(self, A_t=self.A_t.dense())
 
     # -- serialization ------------------------------------------------------
 
@@ -560,7 +653,14 @@ class RoundPlan:
                          else self.topology.as_dict()),
             "seed": self.seed,
             "t0": self.t0,
-            "A_t": self.A_t.tolist(),
+            # sparse plans serialize the CSR arrays (O(nnz) text, the
+            # only way an n = 100_000 plan fits anywhere); dense plans
+            # keep the v3 nested-list layout.
+            "A_t": ({"encoding": "csr",
+                     "indptr": [m.indptr.tolist() for m in self.A_t],
+                     "indices": [m.indices.tolist() for m in self.A_t],
+                     "data": [m.data.tolist() for m in self.A_t]}
+                    if self.is_sparse else self.A_t.tolist()),
             "tau_t": self.tau_t.tolist(),
             "m_t": self.m_t.tolist(),
             "eta_t": self.eta_t.tolist(),
@@ -586,13 +686,27 @@ class RoundPlan:
                 f"unsupported RoundPlan version {d.get('version')!r} "
                 f"(supported: {_JSON_SUPPORTED})")
         spec = d.get("topology")
+        A_raw = d["A_t"]
+        if isinstance(A_raw, dict):
+            if A_raw.get("encoding") != "csr":
+                raise ValueError(
+                    f"unknown A_t encoding {A_raw.get('encoding')!r}")
+            n = int(d["n_clients"])
+            A_t = SparseAseq(
+                [SparseA(n=n, indptr=np.asarray(ip, np.int64),
+                         indices=np.asarray(ix, np.int32),
+                         data=np.asarray(dt, np.float32))
+                 for ip, ix, dt in zip(A_raw["indptr"], A_raw["indices"],
+                                       A_raw["data"])])
+        else:
+            A_t = np.asarray(A_raw, np.float32)
         return cls(
             topology=(None if spec is None
                       else TopologySpec.from_dict(spec)),
             seed=d.get("seed"),
             t0=int(d.get("t0", 0)),
             algorithm=d["algorithm"],
-            A_t=np.asarray(d["A_t"], np.float32),
+            A_t=A_t,
             tau_t=np.asarray(d["tau_t"], np.float32),
             m_t=np.asarray(d["m_t"], np.float64),
             eta_t=np.asarray(d["eta_t"], np.float64),
@@ -627,6 +741,13 @@ class RoundPlan:
             return False
         for f in dataclasses.fields(self):
             a, b = getattr(self, f.name), getattr(other, f.name)
+            if isinstance(a, SparseAseq) or isinstance(b, SparseAseq):
+                # representation is part of plan identity: a sparse and
+                # a dense plan never compare equal (convert first)
+                if not (isinstance(a, SparseAseq)
+                        and isinstance(b, SparseAseq) and a.equals(b)):
+                    return False
+                continue
             if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
                 # optional columns: None on one side only is a mismatch
                 if a is None or b is None:

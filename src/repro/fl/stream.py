@@ -207,7 +207,10 @@ class StreamEngine:
                    if plan.arrival_t is not None
                    else np.zeros((K, n), np.float64))
 
-        A_seq = jnp.asarray(plan.A_t, jnp.float32)
+        # cohort closure slices dense A_t rows; sparse plans densify here
+        # (the sparse *backends* are rejected by resolve_backend)
+        A_seq = jnp.asarray(
+            plan.A_t.dense() if plan.is_sparse else plan.A_t, jnp.float32)
         tau_seq = jnp.asarray(plan.tau_t, jnp.float32)
         m_seq = jnp.asarray(plan.m_t, jnp.float32)
         eta_seq = jnp.asarray(plan.eta_t, jnp.float32)

@@ -40,12 +40,16 @@ from repro.kernels.dispatch import default_interpret, resolve_interpret
 from .fused import aggregate_pallas, mix_aggregate_pallas
 from .mixing import mix_pallas
 from .ref import mix_ref
+from .sparse import sparse_mix_aggregate_pallas, sparse_mix_pallas
 
 PyTree = Any
 
 __all__ = ["mix", "mix_pytree", "mix_aggregate", "aggregate",
            "mix_aggregate_grouped", "aggregate_grouped",
-           "combine_weights", "default_interpret"]
+           "combine_weights", "combine_weights_ell",
+           "sparse_mix", "sparse_mix_aggregate", "sparse_aggregate",
+           "sparse_mix_aggregate_grouped", "sparse_aggregate_grouped",
+           "default_interpret"]
 
 _LANE = 128
 _SUBLANE = 8
@@ -92,18 +96,59 @@ def combine_weights(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
     accepted upload weights).  ``weights = 1.0`` is bitwise-identical to
     passing ``weights=None`` (IEEE ``x * 1.0 == x``), so the synchronous
     path is the exact degenerate case.
+
+    ``m == 0`` (every sampled client dropped / faulted out of a round)
+    safely yields the all-zero row -- the round contributes nothing to
+    the server model -- instead of an inf/nan row poisoning the scan.
+    For ``m != 0`` the guard is bitwise-inert.  The sparse definition
+    (``combine_weights_ell``) shares the same guard.
     """
+    tau = _fold_mask(tau, active, weights)
+    w = jnp.einsum("i,ij->j", tau, A.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    w = _safe_divide_by_m(w, m)
+    if active is not None:
+        w = w * active.astype(jnp.float32)
+    return w
+
+
+def combine_weights_ell(idx: jnp.ndarray, w_ell: jnp.ndarray,
+                        tau: jnp.ndarray, m: jnp.ndarray,
+                        active: Optional[jnp.ndarray] = None,
+                        weights: Optional[jnp.ndarray] = None
+                        ) -> jnp.ndarray:
+    """``combine_weights`` from the ELL form of ``A`` -- O(nnz), never
+    densifying: ``w[j] = (1/m) sum_{(i,k): idx[i,k]=j} tau_i w_ell[i,k]``
+    is a segment-sum over the stored entries (padding slots carry weight
+    0.0, so their contribution to segment 0 vanishes).  Masking semantics
+    and the ``m == 0`` guard are identical to the dense definition
+    (allclose, not bitwise: the reduction order differs)."""
+    tau = _fold_mask(tau, active, weights)
+    contrib = tau[:, None] * w_ell.astype(jnp.float32)
+    w = jax.ops.segment_sum(contrib.ravel(), idx.ravel(),
+                            num_segments=tau.shape[0])
+    w = _safe_divide_by_m(w, m)
+    if active is not None:
+        w = w * active.astype(jnp.float32)
+    return w
+
+
+def _fold_mask(tau, active, weights):
+    """The shared upload-leg folding: tau * active * weights, fp32."""
     tau = tau.astype(jnp.float32)
     if active is not None:
-        act = active.astype(jnp.float32)
-        tau = tau * act
+        tau = tau * active.astype(jnp.float32)
     if weights is not None:
         tau = tau * jnp.asarray(weights, jnp.float32)
-    w = jnp.einsum("i,ij->j", tau, A.astype(jnp.float32),
-                   preferred_element_type=jnp.float32) / m
-    if active is not None:
-        w = w * act
-    return w
+    return tau
+
+
+def _safe_divide_by_m(w, m):
+    """``w / m`` with ``m == 0 -> 0`` (see ``combine_weights``); bitwise
+    ``w / m`` whenever ``m != 0``."""
+    m = jnp.asarray(m, jnp.float32)
+    zero = m == 0
+    return jnp.where(zero, 0.0, w / jnp.where(zero, 1.0, m))
 
 
 def _weight_row(A, tau, m, n_pad, active=None, weights=None):
@@ -223,4 +268,123 @@ def aggregate_grouped(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
     mixed deltas never materialized."""
     return tuple(aggregate(A, tau, m, b, chunk=chunk, interpret=interpret,
                            active=active, weights=weights)
+                 for b in bufs)
+
+
+# --------------------------------------------------------------------------
+# Sparse (ELL) entry points -- A as padded neighbor lists
+# (``repro.core.sparse.SparseA.ell()``), never an (n, n) array.
+# --------------------------------------------------------------------------
+
+
+def _pad_sparse_inputs(idx, w, X, chunk):
+    """Pad (idx, w, X) to TPU tile alignment; padded rows carry index 0 /
+    weight 0.0 (the kernels' no-op slot convention).  Returns
+    ``(idx_p, w_p, X_p, n, p)``."""
+    n, p = X.shape
+    d = idx.shape[1]
+    n_pad = _pad_to(n, _SUBLANE)
+    p_pad = _pad_to(p, chunk)
+    idx_p = jnp.zeros((n_pad, d), jnp.int32).at[:n].set(idx)
+    w_p = jnp.zeros((n_pad, d), jnp.float32).at[:n].set(w)
+    X_p = jnp.zeros((n_pad, p_pad), X.dtype).at[:n, :p].set(X)
+    return idx_p, w_p, X_p, n, p
+
+
+def _sparse_weight_row(idx, w_ell, tau, m, n_pad, active=None,
+                       weights=None):
+    """``combine_weights_ell`` padded to the fused-kernel layout (real
+    weights in row 0 of an ``(_SUBLANE, n_pad)`` block)."""
+    wrow = combine_weights_ell(idx, w_ell, tau, m, active, weights)
+    n = wrow.shape[0]
+    return jnp.zeros((_SUBLANE, n_pad), jnp.float32).at[0, :n].set(wrow)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def sparse_mix(idx: jnp.ndarray, w: jnp.ndarray, X: jnp.ndarray, *,
+               chunk: int = 2048,
+               interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Sparse ``Delta = A @ X`` for arbitrary (n, p): ELL gather kernel,
+    O(n d_max p) work.  allclose to the dense ``mix`` (fp32 accumulation
+    both sides; reduction order differs)."""
+    interpret = resolve_interpret(interpret)
+    idx_p, w_p, X_p, n, p = _pad_sparse_inputs(idx, w, X, chunk)
+    out = sparse_mix_pallas(idx_p, w_p, X_p, chunk=chunk,
+                            interpret=interpret)
+    return out[:n, :p]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def sparse_mix_aggregate(idx: jnp.ndarray, w: jnp.ndarray,
+                         tau: jnp.ndarray, m: jnp.ndarray,
+                         X: jnp.ndarray, *, chunk: int = 2048,
+                         interpret: Optional[bool] = None,
+                         active: Optional[jnp.ndarray] = None,
+                         weights: Optional[jnp.ndarray] = None
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sparse fused eq. 3 + eq. 4: one streaming pass over ``X`` emits
+    the mixed payload and the fp32 aggregate row, with the combine row
+    built by segment-sum (O(nnz)).  Mask/weight semantics match
+    ``mix_aggregate``."""
+    interpret = resolve_interpret(interpret)
+    idx_p, w_p, X_p, n, p = _pad_sparse_inputs(idx, w, X, chunk)
+    wrow_p = _sparse_weight_row(idx, w, tau, m, idx_p.shape[0], active,
+                                weights)
+    mixed, agg = sparse_mix_aggregate_pallas(idx_p, w_p, wrow_p, X_p,
+                                             chunk=chunk,
+                                             interpret=interpret)
+    return mixed[:n, :p], agg[0, :p]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def sparse_aggregate(idx: jnp.ndarray, w: jnp.ndarray, tau: jnp.ndarray,
+                     m: jnp.ndarray, X: jnp.ndarray, *, chunk: int = 2048,
+                     interpret: Optional[bool] = None,
+                     active: Optional[jnp.ndarray] = None,
+                     weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Sparse aggregate-only fast path: the combine row is a segment-sum
+    over the ELL entries, after which ``w @ X`` is an ordinary dense
+    vector-matrix kernel (``fused.aggregate_pallas``) -- no new kernel,
+    nothing (n, n)."""
+    interpret = resolve_interpret(interpret)
+    idx_p, w_p, X_p, n, p = _pad_sparse_inputs(idx, w, X, chunk)
+    wrow_p = _sparse_weight_row(idx, w, tau, m, idx_p.shape[0], active,
+                                weights)
+    agg = aggregate_pallas(wrow_p, X_p, chunk=chunk, interpret=interpret)
+    return agg[0, :p]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def sparse_mix_aggregate_grouped(idx: jnp.ndarray, w: jnp.ndarray,
+                                 tau: jnp.ndarray, m: jnp.ndarray,
+                                 bufs: Tuple[jnp.ndarray, ...], *,
+                                 chunk: int = 2048,
+                                 interpret: Optional[bool] = None,
+                                 active: Optional[jnp.ndarray] = None,
+                                 weights: Optional[jnp.ndarray] = None
+                                 ) -> Tuple[Tuple[jnp.ndarray, ...],
+                                            Tuple[jnp.ndarray, ...]]:
+    """``mix_aggregate_grouped`` on the ELL form: one sparse fused launch
+    per dtype group."""
+    out = [sparse_mix_aggregate(idx, w, tau, m, b, chunk=chunk,
+                                interpret=interpret, active=active,
+                                weights=weights)
+           for b in bufs]
+    return tuple(mb for mb, _ in out), tuple(r for _, r in out)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def sparse_aggregate_grouped(idx: jnp.ndarray, w: jnp.ndarray,
+                             tau: jnp.ndarray, m: jnp.ndarray,
+                             bufs: Tuple[jnp.ndarray, ...], *,
+                             chunk: int = 2048,
+                             interpret: Optional[bool] = None,
+                             active: Optional[jnp.ndarray] = None,
+                             weights: Optional[jnp.ndarray] = None
+                             ) -> Tuple[jnp.ndarray, ...]:
+    """``aggregate_grouped`` on the ELL form: per-group fp32 rows, the
+    mixed deltas never materialized, nothing (n, n)."""
+    return tuple(sparse_aggregate(idx, w, tau, m, b, chunk=chunk,
+                                  interpret=interpret, active=active,
+                                  weights=weights)
                  for b in bufs)

@@ -1,0 +1,142 @@
+"""Pallas gather kernels for *sparse* D2D mixing (paper eq. 3 on ELL).
+
+Every registered topology family is sparse by construction -- a client
+mixes with its ``d`` in-neighbors, and ``d`` stays O(cluster size) while
+``n`` scales -- yet the dense kernels in ``mixing.py``/``fused.py`` pay
+O(n^2) to store ``A`` and O(n^2 p) to multiply it.  These kernels take
+the ELLPACK form produced by ``repro.core.sparse.SparseA.ell()``:
+
+    idx (n, d_max) int32     in-neighbor ids of each destination row
+    w   (n, d_max) float32   the matching A[i, j] = 1/d_j^+ entries
+
+with padding slots carrying ``index 0, weight 0.0`` -- a gather of row 0
+scaled by zero, i.e. a no-op needing no masking -- and compute
+
+    mixed[i] = sum_k w[i, k] * X[idx[i, k]]        (eq. 3)
+
+as ``d_max`` statically-unrolled row gathers with fp32 accumulation.
+Work is O(n d_max p) instead of O(n^2 p); nothing (n, n) exists.
+
+Schedule matches the dense kernels: the grid walks payload chunks (the
+p axis), the small operands (idx, w, and for the fused variant the
+precombined eq.-4 row) stay resident in VMEM, each (n, pc) tile of ``X``
+is read once.  The D2S aggregate row reuses the algebraic identity
+``agg = ((tau^T A)/m) @ X``: the combine row is a segment-sum over the
+same ELL entries (``ops.combine_weights_ell``, O(nnz)), after which the
+aggregate is an ordinary dense vector-matrix product.
+
+Entry points (hardware-aligned shapes; padding is ``ops.py``'s job):
+
+``sparse_mix_pallas``            -- eq. 3 only.
+``sparse_mix_aggregate_pallas``  -- fused eq. 3 + eq. 4 from one
+                                    streaming read of ``X``.
+
+The aggregate-*only* sparse path needs no new kernel at all: once the
+combine row is built sparsely, ``fused.aggregate_pallas`` applies it
+(see ``ops.sparse_aggregate``).
+
+Validated in interpret mode on CPU against the dense oracle
+(tests/test_sparse.py); parity is allclose, not bitwise -- the unrolled
+gather loop accumulates in neighbor order while the dense MXU matmul
+reduces over all n -- with fp32 accumulation on both sides.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["sparse_mix_pallas", "sparse_mix_aggregate_pallas"]
+
+
+def _gather_mix(idx, w, x):
+    """sum_k w[:, k] * x[idx[:, k]] -- fp32 (n, pc) accumulator."""
+    d_max = idx.shape[1]
+    acc = jnp.zeros(x.shape, jnp.float32)
+    for k in range(d_max):      # static unroll over the padded degree
+        acc = acc + w[:, k][:, None] * jnp.take(x, idx[:, k], axis=0)
+    return acc
+
+
+def _sparse_mix_kernel(idx_ref, w_ref, x_ref, o_ref):
+    idx = idx_ref[...]                          # (n_pad, d_max), resident
+    w = w_ref[...].astype(jnp.float32)          # (n_pad, d_max), resident
+    x = x_ref[...].astype(jnp.float32)          # (n_pad, pc) -- read ONCE
+    o_ref[...] = _gather_mix(idx, w, x).astype(o_ref.dtype)
+
+
+def _sparse_fused_kernel(idx_ref, w_ref, wrow_ref, x_ref,
+                         mixed_ref, agg_ref):
+    idx = idx_ref[...]
+    w = w_ref[...].astype(jnp.float32)
+    wrow = wrow_ref[...].astype(jnp.float32)    # (s, n_pad), resident
+    x = x_ref[...].astype(jnp.float32)          # (n_pad, pc) -- read ONCE
+    mixed_ref[...] = _gather_mix(idx, w, x).astype(mixed_ref.dtype)
+    agg_ref[...] = jax.lax.dot_general(
+        wrow, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def sparse_mix_pallas(idx: jnp.ndarray, w: jnp.ndarray, X: jnp.ndarray, *,
+                      chunk: int = 2048,
+                      interpret: bool = True) -> jnp.ndarray:
+    """idx/w (n_pad, d_max); X (n_pad, p_pad), p_pad % chunk == 0.
+
+    Returns the mixed payload (n_pad, p_pad) in X.dtype."""
+    n, p = X.shape
+    d = idx.shape[1]
+    assert idx.shape == (n, d) and w.shape == (n, d), (idx.shape, w.shape)
+    assert p % chunk == 0, (p, chunk)
+    grid = (p // chunk,)
+    return pl.pallas_call(
+        _sparse_mix_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, d), lambda i: (0, 0)),        # idx resident
+            pl.BlockSpec((n, d), lambda i: (0, 0)),        # w resident
+            pl.BlockSpec((n, chunk), lambda i: (0, i)),    # stream X once
+        ],
+        out_specs=pl.BlockSpec((n, chunk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, p), X.dtype),
+        interpret=interpret,
+    )(idx, w, X)
+
+
+def sparse_mix_aggregate_pallas(idx: jnp.ndarray, w: jnp.ndarray,
+                                wrow: jnp.ndarray, X: jnp.ndarray, *,
+                                chunk: int = 2048, interpret: bool = True):
+    """One-pass sparse mix + D2S aggregate.
+
+    idx/w (n_pad, d_max); wrow (s, n_pad) with the precombined
+    ``(tau^T A)/m`` row in wrow[0] (``ops.combine_weights_ell``);
+    X (n_pad, p_pad).  Returns ``(mixed, agg)``: (n_pad, p_pad) in
+    X.dtype and (s, p_pad) float32."""
+    n, p = X.shape
+    d = idx.shape[1]
+    s = wrow.shape[0]
+    assert idx.shape == (n, d) and w.shape == (n, d), (idx.shape, w.shape)
+    assert wrow.shape == (s, n), (wrow.shape, X.shape)
+    assert p % chunk == 0, (p, chunk)
+    grid = (p // chunk,)
+    return pl.pallas_call(
+        _sparse_fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, d), lambda i: (0, 0)),        # idx resident
+            pl.BlockSpec((n, d), lambda i: (0, 0)),        # w resident
+            pl.BlockSpec((s, n), lambda i: (0, 0)),        # wrow resident
+            pl.BlockSpec((n, chunk), lambda i: (0, i)),    # stream X once
+        ],
+        out_specs=[
+            pl.BlockSpec((n, chunk), lambda i: (0, i)),
+            pl.BlockSpec((s, chunk), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, p), X.dtype),
+            jax.ShapeDtypeStruct((s, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idx, w, wrow, X)

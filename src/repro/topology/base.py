@@ -47,7 +47,7 @@ from typing import Any, Callable, Dict, List, Mapping, Optional, Protocol, \
 
 import numpy as np
 
-from repro.core.graphs import ClusterGraph
+from repro.core.graphs import ClusterGraph, SparseClusterGraph
 
 __all__ = [
     "TopologySpec",
@@ -169,6 +169,9 @@ class TopologyModel(Protocol):
 
     def sample(self, rng: np.random.Generator, t: int = 0
                ) -> List[ClusterGraph]: ...
+
+    def sample_sparse(self, rng: np.random.Generator, t: int = 0
+                      ) -> List[SparseClusterGraph]: ...
 
 
 # ---------------------------------------------------------------------------
@@ -402,7 +405,22 @@ class ClusteredTopology:
 
     def sample(self, rng: np.random.Generator, t: int = 0
                ) -> List[ClusterGraph]:
-        """One G(t) snapshot: a list of c cluster digraphs."""
+        """One G(t) snapshot: a list of c cluster digraphs.
+
+        Derived from ``sample_sparse`` -- the sparse CSR snapshot is the
+        primary representation; densifying it block-by-block reproduces
+        the historical dense output bitwise (same rng stream, same edge
+        sets)."""
+        return [g.dense() for g in self.sample_sparse(rng, t)]
+
+    def sample_sparse(self, rng: np.random.Generator, t: int = 0
+                      ) -> List[SparseClusterGraph]:
+        """One G(t) snapshot in CSR form (``SparseClusterGraph`` per
+        cluster): the scale path -- nothing larger than a cluster block
+        is ever densified.  Consumes the rng stream identically to
+        ``sample`` (which is derived from this method), so sparse and
+        dense plans built from the same seed describe the same
+        trajectory."""
         t = int(t)
         if self.stateful:
             if t == 0:
@@ -418,8 +436,7 @@ class ClusteredTopology:
                     f"sample() needs consecutive t = 0, 1, 2, ... "
                     f"(got t={t} after t={self._last_t}); t=0 resets")
         self._last_t = t
-        return [ClusterGraph(vertices=np.asarray(verts),
-                             W=self._cluster_W(rng, t, np.asarray(verts)))
+        return [self._cluster_sparse(rng, t, np.asarray(verts))
                 for verts in self._partition]
 
     # -- state hooks --------------------------------------------------------
@@ -439,3 +456,16 @@ class ClusteredTopology:
     def _cluster_W(self, rng: np.random.Generator, t: int,
                    verts: np.ndarray) -> np.ndarray:
         raise NotImplementedError
+
+    def _cluster_sparse(self, rng: np.random.Generator, t: int,
+                        verts: np.ndarray) -> SparseClusterGraph:
+        """One cluster's CSR snapshot.  The default converts the dense
+        ``_cluster_W`` block -- ``(s, s)`` scratch only, with ``s`` the
+        cluster size, so families whose *generative model* is inherently
+        pairwise (Erdos-Renyi coin flips, geometric distance tests)
+        still produce sparse rows without an O(n^2) global allocation.
+        Deterministic families (``ring``, ``hub``) override this with a
+        native edge-list construction and derive ``_cluster_W`` the
+        other way around."""
+        return SparseClusterGraph.from_dense(
+            verts, self._cluster_W(rng, t, verts))

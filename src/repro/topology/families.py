@@ -29,8 +29,8 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core.graphs import (delete_edge_fraction, ensure_positive_out_degree,
-                               k_regular_digraph)
+from repro.core.graphs import (SparseClusterGraph, delete_edge_fraction,
+                               ensure_positive_out_degree, k_regular_digraph)
 
 from .base import ClusteredTopology, register
 
@@ -57,10 +57,18 @@ class KRegular(ClusteredTopology):
         s = len(verts)
         k_range = p["k_range"]
         k = int(rng.integers(min(k_range), max(k_range) + 1))
-        k = min(k, s)
-        W = k_regular_digraph(s, k, rng, self_loops=bool(p["self_loops"]))
+        # A union of k distinct shift permutations reaches at most s
+        # targets with self-loops (shifts 0..s-1) but only s - 1 without
+        # (shift 0 is forbidden), so tiny clusters must clamp harder.
+        # A singleton cluster has no non-self target at all: force the
+        # self-loop there, as a positive out-degree is non-negotiable
+        # (Fact 1).
+        self_loops = bool(p["self_loops"]) or s == 1
+        k = min(k, s if self_loops else s - 1)
+        W = k_regular_digraph(s, k, rng, self_loops=self_loops)
         if p["p_fail"] > 0:
-            W = delete_edge_fraction(W, float(p["p_fail"]), rng)
+            W = delete_edge_fraction(W, float(p["p_fail"]), rng,
+                                     self_loops=self_loops)
         return W
 
 
@@ -76,7 +84,7 @@ class ErdosRenyi(ClusteredTopology):
         s = len(verts)
         W = (rng.random((s, s)) < float(p["p_edge"])).astype(np.int8)
         np.fill_diagonal(W, 1 if p["self_loops"] else 0)
-        return ensure_positive_out_degree(W)
+        return ensure_positive_out_degree(W, self_loops=bool(p["self_loops"]))
 
 
 @register("geometric")
@@ -116,7 +124,7 @@ class Geometric(ClusteredTopology):
         d = np.linalg.norm(pos[:, None, :] - pos[None, :, :], axis=-1)
         W = (d <= float(p["radius"])).astype(np.int8)
         np.fill_diagonal(W, 1 if p["self_loops"] else 0)
-        return ensure_positive_out_degree(W)
+        return ensure_positive_out_degree(W, self_loops=bool(p["self_loops"]))
 
 
 @register("ring")
@@ -137,7 +145,30 @@ class Ring(ClusteredTopology):
             W[idx, (idx + h) % s] = 1
         if p["self_loops"] or s == 1:
             np.fill_diagonal(W, 1)
-        return ensure_positive_out_degree(W)
+        return ensure_positive_out_degree(
+            W, self_loops=bool(p["self_loops"]))
+
+    def _cluster_sparse(self, rng, t, verts):
+        # Deterministic family: emit CSR directly, no (s, s) scratch.
+        # Pinned equal (densified) to _cluster_W in tests/test_sparse.py.
+        p = self._params
+        s = len(verts)
+        if s == 1:
+            return SparseClusterGraph(
+                vertices=np.asarray(verts),
+                indptr=np.array([0, 1], dtype=np.int64),
+                indices=np.zeros(1, dtype=np.int32))
+        hops = min(max(1, int(p["hops"])), s - 1)
+        i = np.arange(s, dtype=np.int64)[:, None]
+        cols = (i + np.arange(1, hops + 1, dtype=np.int64)[None, :]) % s
+        if p["self_loops"]:
+            cols = np.concatenate([i, cols], axis=1)
+        cols = np.sort(cols, axis=1)
+        d = cols.shape[1]
+        return SparseClusterGraph(
+            vertices=np.asarray(verts),
+            indptr=np.arange(0, (s + 1) * d, d, dtype=np.int64),
+            indices=cols.ravel().astype(np.int32))
 
 
 @register("small_world")
@@ -169,7 +200,8 @@ class SmallWorld(ClusteredTopology):
                     W[i, jn] = 1
         if p["self_loops"] or s == 1:
             np.fill_diagonal(W, 1)
-        return ensure_positive_out_degree(W)
+        return ensure_positive_out_degree(
+            W, self_loops=bool(p["self_loops"]))
 
 
 @register("hub")
@@ -191,4 +223,31 @@ class Hub(ClusteredTopology):
         W[:, :h] = 1                        # everyone transmits to hubs
         W[:h, :] = 1                        # hubs transmit to everyone
         np.fill_diagonal(W, 1 if p["self_loops"] else 0)
-        return ensure_positive_out_degree(W)
+        return ensure_positive_out_degree(
+            W, self_loops=bool(p["self_loops"]))
+
+    def _cluster_sparse(self, rng, t, verts):
+        # Deterministic family: emit CSR directly, no (s, s) scratch.
+        # Pinned equal (densified) to _cluster_W in tests/test_sparse.py.
+        p = self._params
+        s = len(verts)
+        h = max(1, min(int(p["hubs"]), s))
+        self_loops = bool(p["self_loops"])
+        rows = []
+        for i in range(s):
+            if i < h:
+                cols = np.arange(s, dtype=np.int32)
+                if not self_loops:
+                    cols = np.delete(cols, i)
+            else:
+                cols = np.arange(h, dtype=np.int32)
+                if self_loops:
+                    cols = np.append(cols, np.int32(i))
+            if cols.size == 0:      # singleton cluster, self_loops=False
+                cols = np.zeros(1, dtype=np.int32)
+            rows.append(cols)
+        indptr = np.zeros(s + 1, dtype=np.int64)
+        np.cumsum([r.size for r in rows], out=indptr[1:])
+        return SparseClusterGraph(vertices=np.asarray(verts),
+                                  indptr=indptr,
+                                  indices=np.concatenate(rows))
