@@ -10,6 +10,12 @@ Cost model: (#D2S) + 0.1 x (#D2D) (paper Sec. 6.2).  The validated claim
 is the *relative* one -- Algorithm 1 reaches matched accuracy at lower
 total cost -- on a synthetic MNIST-shaped dataset with the paper's exact
 non-iid partition (labels sorted, 2 chunks per client, n=70, c=7).
+
+The ``semidec-int8`` row reruns Algorithm 1 with int8+error-feedback
+quantized uplink payloads (``repro.fl.packing.QuantSpec``); every row
+also reports byte-weighted uplink spend (``uplink_bytes`` /
+``uplink_bytes_per_acc``) at its wire width, so compressed
+comm-per-accuracy lands next to the paper's message-count model.
 """
 
 from __future__ import annotations
@@ -68,7 +74,8 @@ def run(case: str = "high", rounds: int = 15, model: str = "mlp",
     def eval_fn(p):
         return {"test_acc": cnn_lib.accuracy(apply_fn, p, xs, ys)}
 
-    def make_server(algorithm, m_fixed=None, bound_kind="auto"):
+    def make_server(algorithm, m_fixed=None, bound_kind="auto",
+                    quant=None):
         network = D2DNetwork(n=n, c=clusters, k_range=(6, 9),
                              p_fail=cfg_case["p"])
         # deviation from the paper's printed 0.02*0.1^t (which zeroes the
@@ -77,20 +84,42 @@ def run(case: str = "high", rounds: int = 15, model: str = "mlp",
                           m_fixed=m_fixed, seed=seed,
                           bound_kind=bound_kind,
                           eta=lambda t: lr0 * (0.9 ** t))
+        execution = None
+        if quant is not None:
+            from repro.fl import ExecutionConfig
+            execution = ExecutionConfig(backend="aggregate", quant=quant)
         return FederatedServer(network, loss_fn, params0, batcher, sc,
-                               algorithm=algorithm)
+                               algorithm=algorithm, execution=execution)
 
+    from repro.fl.packing import QuantSpec
+    int8 = QuantSpec(storage="int8", block=128, error_feedback=True,
+                     seed=seed)
     runs = {
         # degree-only bounds (what the deployed server can compute) and the
-        # exact-sigma oracle (the regime the paper's figures operate in)
+        # exact-sigma oracle (the regime the paper's figures operate in);
+        # semidec-int8 reruns Algorithm 1 with quantized uplink payloads
+        # so byte-weighted cost-per-accuracy lands next to the message-
+        # count model
         "semidec": make_server("semidec").run(eval_fn),
         "semidec-exact": make_server(
             "semidec", bound_kind="exact").run(eval_fn),
+        "semidec-int8": make_server("semidec", quant=int8).run(eval_fn),
         "fedavg": make_server("fedavg",
                               cfg_case["m_fedavg"]).run(eval_fn),
         "colrel": make_server("colrel",
                               cfg_case["m_colrel"]).run(eval_fn),
     }
+    # per-upload payload bytes on the packed wire (fp32 vs int8+scales)
+    quants = {"semidec-int8": int8}
+    import jax
+    from repro.fl import packing
+    shape_tree = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct((1,) + p.shape, p.dtype), params0)
+    payload_bytes = {
+        name: (packing.pack_spec(shape_tree, quant=q).quantized_nbytes(1)
+               if (q := quants.get(name)) is not None
+               else packing.pack_spec(shape_tree).nbytes(1))
+        for name in runs}
 
     final_accs = {k: h.records[-1].metrics["test_acc"]
                   for k, h in runs.items()}
@@ -98,22 +127,29 @@ def run(case: str = "high", rounds: int = 15, model: str = "mlp",
     rows = []
     for name, h in runs.items():
         cost_at, round_at = _cost_at_accuracy(h, target)
+        pb = int(payload_bytes[name])
+        up = int(h.ledger.total_d2s) * pb
+        acc = final_accs[name]
         rows.append(dict(
             algorithm=name, case=case,
-            final_acc=final_accs[name],
+            final_acc=acc,
             total_cost=float(h.ledger.total_cost),
             total_d2s=h.ledger.total_d2s,
             total_d2d=h.ledger.total_d2d,
             cost_at_matched_acc=cost_at,
             rounds_to_matched_acc=round_at,
             mean_m=float(np.mean([r.m_actual for r in h.records])),
+            payload_bytes_per_upload=pb,
+            uplink_bytes=up,
+            uplink_bytes_per_acc=float(up / max(acc, 1e-9)),
         ))
         if not quiet:
             r = rows[-1]
             print(f"[{case}] {name:14s} acc={r['final_acc']:.3f} "
                   f"cost={r['total_cost']:8.1f} "
                   f"cost@acc>={target:.2f}: {r['cost_at_matched_acc']:8.1f} "
-                  f"mean m={r['mean_m']:.1f}")
+                  f"mean m={r['mean_m']:.1f} "
+                  f"up={up/1e6:7.2f}MB ({up/max(acc,1e-9)/1e6:6.2f}MB/acc)")
     if not quiet:
         for base in ("fedavg", "colrel"):
             bl = next(r for r in rows if r["algorithm"] == base)

@@ -58,14 +58,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.fl import packing
-from repro.kernels.mixing.ops import (aggregate, aggregate_grouped, mix,
+from repro.kernels.mixing.ops import (aggregate, aggregate_grouped,
+                                      aggregate_grouped_q, mix,
                                       mix_aggregate, sparse_aggregate,
                                       sparse_mix)
 from repro.kernels.mixing.ref import mix_ref
 
 __all__ = ["run", "traffic_model", "mesh_traffic_model",
-           "grouped_payload_rows", "plan_overhead_rows",
-           "sparse_vs_dense_rows"]
+           "grouped_payload_rows", "quant_payload_rows",
+           "plan_overhead_rows", "sparse_vs_dense_rows"]
 
 # launch count for the per-leaf psum schedule in the reported model: a
 # representative LM delta-tree leaf count (the packed fused_rs schedule
@@ -173,6 +174,80 @@ def grouped_payload_rows(quiet: bool = False):
                   f"(x{promoted/measured:.2f} saved) "
                   f"ideal-overhead x{measured/ideal:.3f} "
                   f"agg={t_agg:9.1f}us/{spec.n_groups} launches")
+    return rows
+
+
+def quant_payload_rows(quiet: bool = False):
+    """MEASURED compressed wire bytes: quantized payload groups
+    (``QuantSpec`` storage + per-block fp32 absmax scales) vs the
+    full-precision grouped layout they ride on.
+
+    ``bytes_quantized`` counts everything that crosses the wire -- the
+    stored containers (int8 / nibble-packed int4 / fp8) PLUS the fp32
+    scale side buffers -- so the ratio is honest end-to-end compression,
+    not container-only.  The two gate rows (int4 on the bf16-majority LM
+    tree, int8 on the fp32 CNN tree) must land at <= 0.3x the grouped
+    bytes; BENCH_mixing.json pins them via the CI baseline check.
+    Parity: the fused dequant-epilogue aggregate kernel is checked
+    against the einsum oracle over the dequantized rows before timing.
+    """
+    from repro.fl.packing import QuantSpec
+
+    rng = np.random.default_rng(2)
+    rows = []
+    # (layout label, n, bf16 cols x leaves, fp32 cols x leaves, storage)
+    for label, n, bf16_shape, fp32_shape, storage in (
+            ("bf16-majority-lm", 16, (65_536, 4), (1_024, 2), "int8"),
+            ("bf16-majority-lm", 16, (65_536, 4), (1_024, 2), "int4"),
+            ("fp32-cnn", 70, (0, 0), (23_713, 2), "int8")):
+        tree = {}
+        for i in range(bf16_shape[1]):
+            tree[f"w{i}"] = jnp.asarray(
+                rng.standard_normal((n, bf16_shape[0])), jnp.bfloat16)
+        for i in range(fp32_shape[1]):
+            tree[f"b{i}"] = jnp.asarray(
+                rng.standard_normal((n, fp32_shape[0])), jnp.float32)
+        quant = QuantSpec(storage=storage, block=512)
+        spec = packing.pack_spec(tree)            # full-precision wire
+        qspec = packing.pack_spec(tree, quant=quant)
+        bufs = packing.pack(tree, qspec)
+        stored, scales, _ = packing.quantize_packed(bufs, qspec)
+        measured = (sum(b.nbytes for b in stored)
+                    + sum(s.nbytes for s in scales))
+        assert measured == qspec.quantized_nbytes(n)
+        grouped = spec.nbytes(n)
+        ratio = measured / grouped
+
+        # parity: fused dequant-epilogue kernel vs the dequantized oracle
+        A = jnp.eye(n, dtype=jnp.float32)
+        tau = jnp.ones(n, jnp.float32)
+        m = jnp.float32(n)
+        dq = packing.dequantize_packed(stored, scales, qspec)
+        got = aggregate_grouped_q(A, tau, m, stored, scales, quant=quant)
+        for g, d in zip(got, dq):
+            ref = np.einsum("i,ip->p", np.asarray(tau),
+                            np.asarray(d, np.float32)) / float(n)
+            np.testing.assert_allclose(np.asarray(g), ref,
+                                       rtol=1e-5, atol=1e-5)
+        t_agg = _time(lambda: aggregate_grouped_q(A, tau, m, stored,
+                                                  scales, quant=quant))
+
+        row = dict(kind="quant_payload", layout=label, n=n,
+                   storage=storage, block=quant.block,
+                   n_groups=qspec.n_groups,
+                   bytes_grouped=int(grouped),
+                   bytes_quantized=int(measured),
+                   bytes_scales=int(qspec.scales_nbytes(n)),
+                   ratio_vs_grouped=ratio,
+                   us_agg_quant_interp=t_agg,
+                   kernel_launches=qspec.n_groups)
+        rows.append(row)
+        if not quiet:
+            print(f"{label:18s} n={n:3d} {storage:4s} block={quant.block} "
+                  f"grouped={grouped/1e6:7.3f}MB "
+                  f"quantized={measured/1e6:7.3f}MB "
+                  f"(x{ratio:.3f}, scales {qspec.scales_nbytes(n)/1e3:.1f}KB) "
+                  f"agg={t_agg:9.1f}us")
     return rows
 
 
@@ -351,6 +426,10 @@ def run(quiet: bool = False):
         print("\nper-dtype grouped packing: measured payload bytes vs the "
               "promoted one-buffer layout")
     rows.extend(grouped_payload_rows(quiet=quiet))
+    if not quiet:
+        print("\nquantized payload groups: compressed wire bytes vs the "
+              "full-precision grouped layout")
+    rows.extend(quant_payload_rows(quiet=quiet))
     if not quiet:
         print("\nsparse vs dense mixing on block-diagonal topology "
               "matrices (ELL A-operand bytes vs the (n, n) layout)")

@@ -26,8 +26,10 @@ measured per-dtype grouped payload bytes) is tracked across PRs; pass
 ``--check-baseline PATH`` compares the fresh mixing_kernel payload-byte
 fields against a committed baseline (the repo's BENCH_mixing.json) and
 exits non-zero if any modeled or measured payload bytes regressed --
-wall times are machine-dependent and deliberately NOT compared.  CI runs
-this on every push.
+byte fields compare as exact integer counts (a non-integral value is
+itself an error); wall times are machine-dependent and deliberately NOT
+compared.  On success it prints a one-line PASS summary with the row
+and field counts actually checked.  CI runs this on every push.
 """
 
 from __future__ import annotations
@@ -46,7 +48,8 @@ BENCHES = ("singular_bounds", "topology_ablation", "comm_cost",
 # payload-byte fields pinned by --check-baseline: deterministic models /
 # measurements (never wall times), so any increase is a real regression
 _BYTE_FIELDS = ("bytes_two_pass", "bytes_fused", "bytes_agg_only",
-                "bytes_grouped", "bytes_psum_per_worker",
+                "bytes_grouped", "bytes_quantized",
+                "bytes_psum_per_worker",
                 "bytes_reduce_scatter_per_worker")
 
 
@@ -54,6 +57,9 @@ def _row_key(row):
     """Stable identity of a mixing_kernel result row across runs."""
     if row.get("kind") == "grouped_payload":
         return ("grouped_payload", row.get("layout"), row.get("n"))
+    if row.get("kind") == "quant_payload":
+        return ("quant_payload", row.get("layout"), row.get("n"),
+                row.get("storage"))
     if row.get("kind") == "plan_overhead":
         return ("plan_overhead", row.get("n"), row.get("rounds"))
     if row.get("kind") == "sparse_vs_dense":
@@ -61,19 +67,36 @@ def _row_key(row):
     return ("kernel", row.get("n"), row.get("p"), row.get("dtype"))
 
 
-def check_baseline(new_rows, baseline_path) -> list:
+def _as_byte_count(value, key, field, problems):
+    """Byte fields are exact counts: coerce to int, flagging anything
+    non-integral (a fractional 'byte count' means the model computed a
+    rate, not bytes -- comparing those as floats silently passes on
+    representation jitter).  Returns None after flagging."""
+    f = float(value)
+    if not f.is_integer():
+        problems.append(
+            f"{key}: {field} is non-integral ({value!r}) -- byte fields "
+            "must be exact integer counts")
+        return None
+    return int(f)
+
+
+def check_baseline(new_rows, baseline_path, stats=None) -> list:
     """Compare payload-byte fields of fresh mixing_kernel rows against the
     committed baseline; returns a list of human-readable regressions.
 
     Every baseline row and every baseline byte field must find a
     counterpart in the fresh results -- a pinned row/field silently
     disappearing from the benchmark would otherwise turn the gate green
-    while checking nothing."""
+    while checking nothing.  Byte fields compare as exact integers (a
+    non-integral value is itself an error).  Pass a dict as ``stats`` to
+    receive ``rows_checked`` / ``fields_compared`` counts back."""
     with open(baseline_path) as f:
         base_rows = json.load(f).get("mixing_kernel", [])
     base = {_row_key(r): r for r in base_rows}
     new = {_row_key(r): r for r in new_rows}
     problems = []
+    rows_checked = fields_compared = 0
     for key, old in base.items():
         row = new.get(key)
         if row is None:
@@ -81,6 +104,7 @@ def check_baseline(new_rows, baseline_path) -> list:
                 f"{key}: baseline row has no counterpart in the fresh "
                 "results -- pinned benchmark entry dropped or renamed")
             continue
+        rows_checked += 1
         for field in _BYTE_FIELDS:
             if field not in old:
                 continue
@@ -89,15 +113,22 @@ def check_baseline(new_rows, baseline_path) -> list:
                     f"{key}: pinned field {field} missing from the fresh "
                     "results")
                 continue
-            new_v, old_v = float(row[field]), float(old[field])
+            new_v = _as_byte_count(row[field], key, field, problems)
+            old_v = _as_byte_count(old[field], key, field, problems)
+            if new_v is None or old_v is None:
+                continue
+            fields_compared += 1
             if new_v > old_v:
                 problems.append(
                     f"{key}: {field} regressed "
-                    f"{old_v:.0f} -> {new_v:.0f} bytes")
+                    f"{old_v:d} -> {new_v:d} bytes")
     if not base:
         problems.append(
             f"no mixing_kernel rows in {baseline_path} -- baseline stale "
             "or malformed")
+    if stats is not None:
+        stats["rows_checked"] = rows_checked
+        stats["fields_compared"] = fields_compared
     return problems
 
 
@@ -148,6 +179,9 @@ def main(argv=None) -> int:
             results[name] = dropout_sweep.run(
                 rates=(0.0, 0.2) if args.fast else (0.0, 0.1, 0.3),
                 rounds=3 if args.fast else 6)
+            results[name] += dropout_sweep.run_quant(
+                rates=(0.0,) if args.fast else (0.0, 0.2),
+                rounds=3 if args.fast else 6)
         elif name == "staleness_sweep":
             results[name] = dropout_sweep.run_staleness(
                 buffers=(None, 6) if args.fast else (None, 12, 6),
@@ -176,15 +210,19 @@ def main(argv=None) -> int:
         if "mixing_kernel" not in results:
             print("--check-baseline: mixing_kernel did not run")
             return 2
+        stats = {}
         problems = check_baseline(results["mixing_kernel"],
-                                  args.check_baseline)
+                                  args.check_baseline, stats=stats)
         if problems:
             print("\npayload-bytes regressions vs "
                   f"{args.check_baseline}:")
             for p in problems:
                 print(f"  {p}")
             return 2
-        print(f"\npayload bytes OK vs baseline {args.check_baseline}")
+        print(f"\nPASS: payload bytes OK vs baseline "
+              f"{args.check_baseline} "
+              f"({stats['rows_checked']} rows checked, "
+              f"{stats['fields_compared']} byte fields compared)")
 
     print("\nall benchmarks complete")
     return 0

@@ -83,6 +83,7 @@ __all__ = [
     "make_round_fn",
     "make_scanned_rounds",
     "MIXING_BACKENDS",
+    "QUANT_BACKENDS",
 ]
 
 PyTree = Any
@@ -90,6 +91,13 @@ LossFn = Callable[[PyTree, PyTree], jnp.ndarray]  # (params, batch) -> scalar
 
 MIXING_BACKENDS = ("einsum", "pallas", "fused", "aggregate", "sparse",
                    "sparse_aggregate")
+
+# backends that accept quantized payload groups: every packed one-pass
+# path (dequant fused into the kernels) plus the einsum oracle (which
+# mixes the dequantized fp32 buffers directly).  The leaf-wise 'pallas'
+# backend has no packed buffers to attach scales to.
+QUANT_BACKENDS = ("einsum", "fused", "aggregate", "sparse",
+                  "sparse_aggregate")
 
 
 def local_sgd(loss_fn: LossFn, params: PyTree, batches: PyTree,
@@ -259,9 +267,125 @@ def _mix_and_update(global_params, deltas, A, tau, m, *, mixing_backend,
         f"got {mixing_backend!r}")
 
 
+def _check_quant_chunk_arg(quant, chunk: int) -> None:
+    """Fail fast at build time: every Pallas payload tile must cover
+    whole scale blocks (mirrors ``kernels.mixing.ops._check_quant_chunk``
+    without importing the kernel package at call-graph build)."""
+    if chunk % quant.block:
+        raise ValueError(
+            f"chunk ({chunk}) must be a multiple of quant.block "
+            f"({quant.block}) so every payload tile covers whole scale "
+            "blocks")
+
+
+def _quantize_deltas(deltas, *, quant, qstate, shards: int = 1):
+    """Client-side quantizer step shared by every quant backend: pack the
+    delta tree, quantize ``x + residual`` under ``quant``, and advance the
+    ``(residuals, key)`` state.  With error feedback off the residual
+    buffers stay zero; the PRNG key only advances for stochastic rounding
+    (nearest-mode trajectories are key-independent).  ``shards`` forwards
+    to ``pack_spec`` (the mesh 'fused_rs' schedule aligns groups to the
+    reduce-scatter width)."""
+    from repro.fl import packing
+
+    spec = packing.pack_spec(deltas, shards=shards, quant=quant)
+    bufs = packing.pack(deltas, spec)
+    residuals, key = qstate
+    use_key = None
+    if quant.rounding == "stochastic":
+        key, use_key = jax.random.split(key)
+    stored, scales, new_res = packing.quantize_packed(
+        bufs, spec, residuals if quant.error_feedback else None, use_key)
+    new_qstate = ((new_res if quant.error_feedback else residuals), key)
+    return spec, stored, scales, new_qstate
+
+
+def _mix_and_update_quant(global_params, deltas, A, tau, m, *,
+                          mixing_backend, chunk, interpret, active, quant,
+                          qstate):
+    """Quantized eq. 3 + eq. 4: the deltas cross the wire as stored
+    containers + per-block scales and every backend consumes that wire
+    format directly (dequant fused into the kernels; the einsum oracle
+    dequantizes explicitly).  Returns ``(new_global, mixed, new_qstate)``.
+
+    Straggler masks act on the *wire*: a dropped client's payload is
+    zeroed by masking its scale rows (mixed leg) and its upload folds out
+    of the combine row (aggregate leg).  The client-side quantizer state
+    still advances for dropped clients -- quantization happens before the
+    network, the drop on it.
+    """
+    from repro.fl import packing
+
+    spec, stored, scales, new_qstate = _quantize_deltas(
+        deltas, quant=quant, qstate=qstate)
+
+    if mixing_backend == "einsum":
+        # reference oracle: mix the dequantized fp32 buffers with the
+        # same mask recipe as the unquantized einsum branch.
+        dq = packing.dequantize_packed(stored, scales, spec)
+        if active is not None:
+            dq = tuple(mask_clients(list(dq), active))
+            tau = tau * active
+        A32 = A.astype(jnp.float32)
+        tau32 = tau.astype(jnp.float32)
+        mixed_bufs = tuple(
+            jnp.einsum("ij,jp->ip", A32, b,
+                       preferred_element_type=jnp.float32) for b in dq)
+        agg_rows = tuple(
+            jnp.einsum("i,ip->p", tau32, mb,
+                       preferred_element_type=jnp.float32) / m
+            for mb in mixed_bufs)
+        return (packing.apply_aggregate_row(global_params, agg_rows, spec),
+                packing.unpack(mixed_bufs, spec), new_qstate)
+
+    if mixing_backend in ("fused", "aggregate"):
+        from repro.kernels.mixing.ops import (aggregate_grouped_q,
+                                              mix_aggregate_grouped_q)
+
+        if mixing_backend == "aggregate":
+            agg_rows = aggregate_grouped_q(A, tau, m, stored, scales,
+                                           quant=quant, chunk=chunk,
+                                           interpret=interpret,
+                                           active=active)
+            return (packing.apply_aggregate_row(global_params, agg_rows,
+                                                spec), None, new_qstate)
+        if active is not None:
+            # mask the mixed leg on the scales -- one multiply on the
+            # tiny side buffer, the payload is never touched.
+            scales = tuple(mask_clients(list(scales), active))
+        mixed_bufs, agg_rows = mix_aggregate_grouped_q(
+            A, tau, m, stored, scales, quant=quant, chunk=chunk,
+            interpret=interpret, active=active)
+        return (packing.apply_aggregate_row(global_params, agg_rows, spec),
+                packing.unpack(mixed_bufs, spec), new_qstate)
+
+    if mixing_backend in ("sparse", "sparse_aggregate"):
+        from repro.kernels.mixing.ops import (
+            sparse_aggregate_grouped_q, sparse_mix_aggregate_grouped_q)
+
+        idx, w = A      # ELL pair (n, d_max), never an (n, n) matrix
+        if mixing_backend == "sparse_aggregate":
+            agg_rows = sparse_aggregate_grouped_q(
+                idx, w, tau, m, stored, scales, quant=quant, chunk=chunk,
+                interpret=interpret, active=active)
+            return (packing.apply_aggregate_row(global_params, agg_rows,
+                                                spec), None, new_qstate)
+        if active is not None:
+            scales = tuple(mask_clients(list(scales), active))
+        mixed_bufs, agg_rows = sparse_mix_aggregate_grouped_q(
+            idx, w, tau, m, stored, scales, quant=quant, chunk=chunk,
+            interpret=interpret, active=active)
+        return (packing.apply_aggregate_row(global_params, agg_rows, spec),
+                packing.unpack(mixed_bufs, spec), new_qstate)
+
+    raise ValueError(
+        f"quantized rounds support mixing_backend in {QUANT_BACKENDS}, "
+        f"got {mixing_backend!r}")
+
+
 def make_round_fn(loss_fn: LossFn, jit: bool = True,
                   mixing_backend: str = "einsum", *, chunk: int = 2048,
-                  interpret: Optional[bool] = None):
+                  interpret: Optional[bool] = None, quant=None):
     """Build the jitted global-round function.
 
     Signature: ``round_fn(global_params, client_batches, A, tau, m, eta[,
@@ -283,11 +407,44 @@ def make_round_fn(loss_fn: LossFn, jit: bool = True,
     are ignored by 'einsum'.  ``interpret=None`` (default) resolves per
     platform -- compiled on TPU, interpreter elsewhere
     (``repro.kernels.mixing.ops.default_interpret``).
+
+    ``quant`` (a ``repro.fl.packing.QuantSpec``, default None) switches
+    the round to quantized payload groups: the signature grows a trailing
+    ``qstate`` argument (``packing.init_quant_state``) and the round
+    returns ``(new_global_params, mixed_deltas, new_qstate)``.  Only
+    ``QUANT_BACKENDS`` support it; with ``quant=None`` nothing about the
+    unquantized path changes.
     """
     if mixing_backend not in MIXING_BACKENDS:
         raise ValueError(
             f"mixing_backend must be one of {MIXING_BACKENDS}, "
             f"got {mixing_backend!r}")
+    if quant is not None:
+        if mixing_backend not in QUANT_BACKENDS:
+            raise ValueError(
+                f"quantized rounds support mixing_backend in "
+                f"{QUANT_BACKENDS}, got {mixing_backend!r}")
+        _check_quant_chunk_arg(quant, chunk)
+
+        def round_fn_q(global_params: PyTree, client_batches: PyTree,
+                       A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
+                       eta: jnp.ndarray,
+                       active: Optional[jnp.ndarray] = None,
+                       qstate=None) -> Tuple[PyTree, PyTree, Any]:
+            if qstate is None:
+                raise ValueError(
+                    "quantized round_fn needs the quantizer state: build "
+                    "it with packing.init_quant_state(spec, n) and thread "
+                    "the returned new_qstate into the next round")
+            deltas = client_deltas(loss_fn, global_params, client_batches,
+                                   eta)
+            return _mix_and_update_quant(
+                global_params, deltas, A, tau, m,
+                mixing_backend=mixing_backend, chunk=chunk,
+                interpret=interpret, active=active, quant=quant,
+                qstate=qstate)
+
+        return jax.jit(round_fn_q) if jit else round_fn_q
 
     def round_fn(global_params: PyTree, client_batches: PyTree,
                  A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
@@ -305,7 +462,7 @@ def make_round_fn(loss_fn: LossFn, jit: bool = True,
 def make_scanned_rounds(loss_fn: LossFn, K: int, jit: bool = True,
                         mixing_backend: str = "einsum", *,
                         chunk: int = 2048,
-                        interpret: Optional[bool] = None):
+                        interpret: Optional[bool] = None, quant=None):
     """Build a driver that runs ``K`` global rounds in one ``lax.scan``.
 
     The host builds the whole time-varying topology sequence up front and
@@ -328,10 +485,38 @@ def make_scanned_rounds(loss_fn: LossFn, K: int, jit: bool = True,
     The scan body is the *same* composition as ``make_round_fn``'s body,
     so the trajectory is bitwise-identical to K sequential ``round_fn``
     calls on the same inputs (asserted in tests/test_fused_mixing.py).
+
+    With ``quant`` set the quantizer state joins the scan carry: the
+    driver takes a trailing ``qstate`` argument and returns ``(final,
+    params_seq, final_qstate)`` -- error-feedback residuals accumulate
+    across the K rounds exactly as in the sequential loop.
     """
     round_fn = make_round_fn(loss_fn, jit=False,
                              mixing_backend=mixing_backend, chunk=chunk,
-                             interpret=interpret)
+                             interpret=interpret, quant=quant)
+
+    if quant is not None:
+        def scanned_q(global_params: PyTree, client_batches_seq: PyTree,
+                      A_seq: jnp.ndarray, tau_seq: jnp.ndarray,
+                      m_seq: jnp.ndarray, eta_seq: jnp.ndarray,
+                      active_seq: Optional[jnp.ndarray] = None,
+                      qstate=None) -> Tuple[PyTree, PyTree, Any]:
+            def body(carry, xs):
+                params, qs = carry
+                batches, A, tau, m, eta = xs[:5]
+                active = xs[5] if active_seq is not None else None
+                new_params, _, new_qs = round_fn(params, batches, A, tau,
+                                                 m, eta, active, qs)
+                return (new_params, new_qs), new_params
+
+            xs = (client_batches_seq, A_seq, tau_seq, m_seq, eta_seq)
+            if active_seq is not None:
+                xs = xs + (active_seq,)
+            (final, final_qstate), params_seq = jax.lax.scan(
+                body, (global_params, qstate), xs, length=K)
+            return final, params_seq, final_qstate
+
+        return jax.jit(scanned_q) if jit else scanned_q
 
     def scanned(global_params: PyTree, client_batches_seq: PyTree,
                 A_seq: jnp.ndarray, tau_seq: jnp.ndarray,

@@ -149,7 +149,8 @@ def _mix_and_aggregate(mesh, mixing: str, deltas: PyTree, A: jnp.ndarray,
                        tau: jnp.ndarray, m: jnp.ndarray,
                        global_params: PyTree, msize: int,
                        zero: bool = False,
-                       active: Optional[jnp.ndarray] = None) -> PyTree:
+                       active: Optional[jnp.ndarray] = None,
+                       quant=None, qstate=None) -> PyTree:
     """new_global = global + (1/m) sum_i tau_i (A @ deltas)_i.
 
     All client-axis communication happens here: the D2D mixing over the
@@ -162,10 +163,22 @@ def _mix_and_aggregate(mesh, mixing: str, deltas: PyTree, A: jnp.ndarray,
     precombined weight row (``combine_weights``) -- zero payload cost;
     the materializing schedules zero the dropped rows before eq. 3.  An
     all-ones mask is bitwise-identical to ``active=None``.
+
+    ``quant`` (a ``repro.fl.packing.QuantSpec``) switches the one-pass
+    schedules to quantized payload groups: the deltas are quantized
+    client-side (error feedback in ``qstate``) and only the stored
+    containers + per-block scales cross the client axis; the return value
+    becomes ``(new_global, new_qstate)``.  Only 'fused' and 'fused_rs'
+    support it -- the materializing schedules would decompress n times.
     """
     caxes = client_axes(mesh)
     n_data = data_axis_size(mesh)
     n = n_clients_of(mesh)
+
+    if quant is not None and mixing not in ("fused", "fused_rs"):
+        raise ValueError(
+            "quantized payloads on the mesh runtime require the one-pass "
+            f"'fused' or 'fused_rs' schedules, got {mixing!r}")
 
     if active is not None and mixing in ("ring", "gather", "einsum"):
         act = active.astype(jnp.float32)
@@ -206,9 +219,23 @@ def _mix_and_aggregate(mesh, mixing: str, deltas: PyTree, A: jnp.ndarray,
         from repro.fl import packing
         from repro.kernels.mixing.ops import combine_weights
 
+        w = combine_weights(A, tau, m, active)
+        if quant is not None:
+            from repro.core.rounds import _quantize_deltas
+
+            spec, stored, scales, new_qstate = _quantize_deltas(
+                deltas, quant=quant, qstate=qstate)
+            # the wire carries (stored, scales); the aggregate row is the
+            # combine-row product over the dequantized fp32 values
+            dq = packing.dequantize_packed(stored, scales, spec)
+            agg_rows = tuple(
+                jnp.einsum("j,jp->p", w, b,
+                           preferred_element_type=jnp.float32)
+                for b in dq)
+            return (packing.apply_aggregate_row(global_params, agg_rows,
+                                                spec), new_qstate)
         spec = packing.pack_spec(deltas)
         bufs = packing.pack(deltas, spec)           # per-group (n, P_pad_g)
-        w = combine_weights(A, tau, m, active)
         agg_rows = tuple(
             jnp.einsum("j,jp->p", w, b.astype(jnp.float32),
                        preferred_element_type=jnp.float32)
@@ -226,11 +253,45 @@ def _mix_and_aggregate(mesh, mixing: str, deltas: PyTree, A: jnp.ndarray,
         from repro.fl import packing
         from repro.kernels.mixing.ops import combine_weights
 
+        w = combine_weights(A, tau, m, active)             # (n,) fp32
+        if quant is not None:
+            from repro.core.rounds import _quantize_deltas
+
+            # groups align to lcm(lane * n_data, block) so both the
+            # reduce-scatter and the scale blocks tile evenly
+            spec, stored, scales, new_qstate = _quantize_deltas(
+                deltas, quant=quant, qstate=qstate, shards=n_data)
+
+            def rs_q_body(bs, ss, wv):
+                # worker i dequantizes only its OWN packed row -- the
+                # cross-worker traffic is the psum_scatter of the fp32
+                # contribution, while the stored+scales rows stay local
+                outs = []
+                for b, s in zip(bs, ss):
+                    dq = packing.dequantize_group(b, s, quant)
+                    contrib = wv[0] * dq[0]                 # (P_pad_g,)
+                    part = jax.lax.psum_scatter(contrib, caxes[-1],
+                                                scatter_dimension=0,
+                                                tiled=True)
+                    if len(caxes) > 1:
+                        part = jax.lax.psum(part, caxes[:-1])
+                    outs.append(part)
+                return tuple(outs)
+
+            agg_rows = _shard_map(
+                rs_q_body, mesh,
+                in_specs=(tuple(P(caxes, None) for _ in stored),
+                          tuple(P(caxes, None) for _ in scales),
+                          P(caxes)),
+                out_specs=tuple(P(caxes[-1]) for _ in stored))(
+                    stored, scales, w)
+            return (packing.apply_aggregate_row(global_params, agg_rows,
+                                                spec), new_qstate)
+
         # every group's P_pad_g is shard-aligned, so each per-dtype row
         # reduce-scatters evenly over 'data' on its own
         spec = packing.pack_spec(deltas, shards=n_data)
         bufs = packing.pack(deltas, spec)           # per-group (n, P_pad_g)
-        w = combine_weights(A, tau, m, active)             # (n,) fp32
 
         def rs_body(bs, wv):
             outs = []
@@ -329,7 +390,7 @@ def _mix_and_aggregate(mesh, mixing: str, deltas: PyTree, A: jnp.ndarray,
 
 def make_train_step(cfg: ModelConfig, mesh, mixing: str = "ring",
                     jit: bool = True, zero: bool = False,
-                    client_impl: str = "vmap"):
+                    client_impl: str = "vmap", quant=None):
     """Build ``train_step(global_params, tokens, A, tau, m, eta[, prefix]
     [, active])``.
 
@@ -347,6 +408,11 @@ def make_train_step(cfg: ModelConfig, mesh, mixing: str = "ring",
                      per-client step (SP-MLP / expert-parallel MoE), which
                      vmap's replication rule cannot express (EXPERIMENTS
                      §Perf pair A iter 6b).
+
+    ``quant`` (a ``repro.fl.packing.QuantSpec``; 'fused'/'fused_rs' only)
+    quantizes the payload client-side: the step grows a trailing
+    ``qstate`` argument and returns ``(new_global, new_qstate)``
+    (``_mix_and_aggregate``).
     """
     if mixing not in MIXINGS:
         raise ValueError(f"mixing must be one of {MIXINGS}")
@@ -354,13 +420,17 @@ def make_train_step(cfg: ModelConfig, mesh, mixing: str = "ring",
         raise ValueError("zero sharding is implemented for ring mixing")
     if client_impl not in ("vmap", "shardmap"):
         raise ValueError("client_impl must be 'vmap' or 'shardmap'")
+    if quant is not None and mixing not in ("fused", "fused_rs"):
+        raise ValueError(
+            "quantized payloads on the mesh runtime require the one-pass "
+            f"'fused' or 'fused_rs' schedules, got {mixing!r}")
     model = Model(cfg)
     n = n_clients_of(mesh)
     caxes = client_axes(mesh)
     msize = model_axis_size(mesh)
 
     def train_step(global_params, tokens, A, tau, m, eta, prefix=None,
-                   active=None):
+                   active=None, qstate=None):
         cspecs = shard_rules.param_specs(global_params, msize,
                                          prefix=(caxes,))
         cshard = _shardings(mesh, cspecs)
@@ -438,9 +508,15 @@ def make_train_step(cfg: ModelConfig, mesh, mixing: str = "ring",
                               global_params)
 
         # 3.+4. D2D mixing + D2S sampled aggregation
+        if quant is not None and qstate is None:
+            raise ValueError(
+                "quantized train_step needs the quantizer state: build it "
+                "with packing.init_quant_state(spec, n) and thread the "
+                "returned new_qstate into the next step")
         return _mix_and_aggregate(mesh, mixing, deltas, A, tau, m,
                                   global_params, msize, zero=zero,
-                                  active=active)
+                                  active=active, quant=quant,
+                                  qstate=qstate)
 
     if not jit:
         return train_step
@@ -454,7 +530,7 @@ def make_train_step(cfg: ModelConfig, mesh, mixing: str = "ring",
 def make_scanned_train_steps(cfg: ModelConfig, mesh, K: int,
                              mixing: str = "ring", jit: bool = True,
                              zero: bool = False,
-                             client_impl: str = "vmap"):
+                             client_impl: str = "vmap", quant=None):
     """Build a driver that runs ``K`` mesh train steps in one ``lax.scan``.
 
     The mesh sibling of ``repro.core.rounds.make_scanned_rounds``: the host
@@ -477,9 +553,39 @@ def make_scanned_train_steps(cfg: ModelConfig, mesh, K: int,
     ``mixing`` schedule, including the manual shard_map ones -- shard_map
     nests under scan), so the trajectory is bitwise-identical to K
     sequential ``train_step`` dispatches on the same inputs (asserted in
-    tests/test_mesh_scan_equivalence.py)."""
+    tests/test_mesh_scan_equivalence.py).
+
+    With ``quant`` set the quantizer state joins the scan carry: the
+    driver takes a trailing ``qstate`` argument and returns
+    ``(final_params, params_seq, final_qstate)``."""
     step = make_train_step(cfg, mesh, mixing=mixing, jit=False, zero=zero,
-                           client_impl=client_impl)
+                           client_impl=client_impl, quant=quant)
+
+    if quant is not None:
+        def scanned_q(global_params, tokens_seq, A_seq, tau_seq, m_seq,
+                      eta_seq, prefix_seq=None, active_seq=None,
+                      qstate=None):
+            def body(carry, xs):
+                params, qs = carry
+                tokens, A, tau, m, eta = xs[:5]
+                rest = list(xs[5:])
+                prefix = rest.pop(0) if prefix_seq is not None else None
+                active = rest.pop(0) if active_seq is not None else None
+                new, new_qs = step(params, tokens, A, tau, m, eta,
+                                   prefix=prefix, active=active,
+                                   qstate=qs)
+                return (new, new_qs), new
+
+            xs = (tokens_seq, A_seq, tau_seq, m_seq, eta_seq)
+            if prefix_seq is not None:
+                xs = xs + (prefix_seq,)
+            if active_seq is not None:
+                xs = xs + (active_seq,)
+            (final, final_qstate), params_seq = jax.lax.scan(
+                body, (global_params, qstate), xs, length=K)
+            return final, params_seq, final_qstate
+
+        return jax.jit(scanned_q) if jit else scanned_q
 
     def scanned(global_params, tokens_seq, A_seq, tau_seq, m_seq, eta_seq,
                 prefix_seq=None, active_seq=None):

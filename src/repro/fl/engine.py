@@ -55,8 +55,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.metrics import CommLedger
-from repro.core.rounds import MIXING_BACKENDS, make_round_fn, \
-    make_scanned_rounds
+from repro.core.rounds import MIXING_BACKENDS, QUANT_BACKENDS, \
+    make_round_fn, make_scanned_rounds
 from repro.core.server import History, RoundRecord
 from repro.core.sparse import SparseAseq
 from .distributed import MIXINGS, make_scanned_train_steps, make_train_step
@@ -82,6 +82,11 @@ class ExecutionConfig:
     tune the Pallas kernels (``interpret=None`` resolves per platform).
     ``stream`` (a ``repro.fl.stream.StreamConfig``) selects the
     event-driven semi-async runtime instead of the synchronous ones.
+    ``quant`` (a ``repro.fl.packing.QuantSpec``) turns on quantized
+    payload groups -- it overrides a plan-carried ``plan.quant``; either
+    source is validated against the effective backend at execute time
+    (``QUANT_BACKENDS`` locally, 'fused'/'fused_rs' on the mesh; the
+    stream runtime rejects quantization).
     """
     backend: str = "einsum"
     scan: bool = False
@@ -92,6 +97,29 @@ class ExecutionConfig:
     mesh: Any = None
     model_cfg: Any = None
     stream: Any = None
+    quant: Any = None
+
+
+def _check_quant_backend(quant, backend: str, mesh: bool) -> None:
+    """One quant-support matrix: the packed one-pass paths locally
+    (``QUANT_BACKENDS``), the one-pass schedules on the mesh.  Validates
+    the *effective* backend, so e.g. 'fused' that upgraded to 'aggregate'
+    still quantizes while 'pallas' kept alive by record_mixed is
+    rejected (its leaf-wise kernels have no packed buffers to attach
+    scales to)."""
+    if quant is None:
+        return
+    if mesh:
+        if backend not in ("fused", "fused_rs"):
+            raise ValueError(
+                "quantized payloads on the mesh runtime require the "
+                f"one-pass 'fused' or 'fused_rs' schedules, got "
+                f"{backend!r}")
+        return
+    if backend not in QUANT_BACKENDS:
+        raise ValueError(
+            f"quantized rounds support mixing_backend in "
+            f"{QUANT_BACKENDS}, got {backend!r}")
 
 
 def resolve_backend(cfg: ExecutionConfig) -> str:
@@ -105,6 +133,12 @@ def resolve_backend(cfg: ExecutionConfig) -> str:
         if cfg.mesh is not None:
             raise ValueError("the stream runtime is single-host; "
                              "cfg.mesh is unsupported with cfg.stream")
+        if cfg.quant is not None:
+            raise ValueError(
+                "quantized payloads are not supported on the stream "
+                "runtime: stale cohorts re-aggregate deltas from "
+                "earlier rounds, which has no well-defined "
+                "error-feedback residual; use LocalEngine or MeshEngine")
         if cfg.scan:
             raise ValueError(
                 "scan=True contradicts the stream runtime: round closure "
@@ -136,6 +170,7 @@ def resolve_backend(cfg: ExecutionConfig) -> str:
             raise ValueError(
                 "record_mixed is not supported on the mesh runtime: "
                 "the mesh train step never returns mixed deltas")
+        _check_quant_backend(cfg.quant, cfg.backend, mesh=True)
         return cfg.backend
     if cfg.backend not in MIXING_BACKENDS:
         raise ValueError(
@@ -149,11 +184,13 @@ def resolve_backend(cfg: ExecutionConfig) -> str:
     # History never records per-client mixed deltas, so unless the caller
     # explicitly keeps them, the kernel backends dispatch the
     # aggregate-only fast path (~3x less payload traffic).
+    effective = cfg.backend
     if not cfg.record_mixed and cfg.backend in ("pallas", "fused"):
-        return "aggregate"
+        effective = "aggregate"
     if not cfg.record_mixed and cfg.backend == "sparse":
-        return "sparse_aggregate"
-    return cfg.backend
+        effective = "sparse_aggregate"
+    _check_quant_backend(cfg.quant, effective, mesh=False)
+    return effective
 
 
 class Engine(Protocol):
@@ -200,6 +237,34 @@ def _device_columns(plan: RoundPlan, sparse: bool = False):
     active_seq = (jnp.asarray(plan.active_t, jnp.float32)
                   if plan.has_dropout else None)
     return A_seq, tau_seq, m_seq, eta_seq, active_seq
+
+
+def _quant_setup(cfg: ExecutionConfig, plan: RoundPlan, params: PyTree,
+                 backend: str, mesh=None):
+    """Resolve the effective quant config (cfg overrides plan) and build
+    the round-0 quantizer state.
+
+    The packing spec only reads leaf shapes/dtypes, so it is built from
+    ``ShapeDtypeStruct``s of the *delta* tree (deltas share the param
+    tree's structure and dtypes) -- the same cache entry the round
+    functions hit with real delta trees.  Returns ``(quant, qstate)``,
+    both None when neither source configures quantization."""
+    quant = cfg.quant if cfg.quant is not None else plan.quant
+    if quant is None:
+        return None, None
+    _check_quant_backend(quant, backend, mesh=mesh is not None)
+    from . import packing
+
+    shards = 1
+    if mesh is not None and backend == "fused_rs":
+        from repro.launch.mesh import data_axis_size
+        shards = data_axis_size(mesh)
+    n = plan.n_clients
+    spec = packing.pack_spec(
+        jax.tree.map(lambda p: jax.ShapeDtypeStruct((n,) + p.shape,
+                                                    p.dtype), params),
+        shards=shards, quant=quant)
+    return quant, packing.init_quant_state(spec, n)
 
 
 def _record(plan: RoundPlan, t: int) -> RoundRecord:
@@ -267,15 +332,21 @@ class LocalEngine:
             plan, sparse=sparse)
         history = History(algorithm=plan.algorithm,
                           ledger=CommLedger(energy_ratio=energy_ratio))
+        quant, qstate = _quant_setup(cfg, plan, params, self.backend)
 
         if cfg.scan:
             scanned = make_scanned_rounds(
                 self.loss_fn, K, jit=cfg.jit, mixing_backend=self.backend,
-                chunk=cfg.chunk, interpret=cfg.interpret)
+                chunk=cfg.chunk, interpret=cfg.interpret, quant=quant)
             batches_seq = jax.tree.map(lambda *bs: jnp.stack(bs), *batches)
-            params, params_seq = scanned(params, batches_seq, A_seq,
-                                         tau_seq, m_seq, eta_seq,
-                                         active_seq)
+            if quant is not None:
+                params, params_seq, _ = scanned(params, batches_seq, A_seq,
+                                                tau_seq, m_seq, eta_seq,
+                                                active_seq, qstate)
+            else:
+                params, params_seq = scanned(params, batches_seq, A_seq,
+                                             tau_seq, m_seq, eta_seq,
+                                             active_seq)
             _fill_history(plan, history,
                           lambda t: jax.tree.map(lambda x: x[t], params_seq),
                           eval_fn, eval_every)
@@ -283,14 +354,19 @@ class LocalEngine:
 
         round_fn = make_round_fn(self.loss_fn, jit=cfg.jit,
                                  mixing_backend=self.backend,
-                                 chunk=cfg.chunk, interpret=cfg.interpret)
+                                 chunk=cfg.chunk, interpret=cfg.interpret,
+                                 quant=quant)
         for t in range(K):
             A_arg = ((A_seq[0][t], A_seq[1][t]) if sparse else A_seq[t])
             args = (params, batches[t], A_arg, tau_seq[t], m_seq[t],
                     eta_seq[t])
-            if active_seq is not None:
-                args = args + (active_seq[t],)
-            params, _ = round_fn(*args)
+            if active_seq is not None or quant is not None:
+                args = args + (active_seq[t] if active_seq is not None
+                               else None,)
+            if quant is not None:
+                params, _, qstate = round_fn(*args, qstate)
+            else:
+                params, _ = round_fn(*args)
             # record inline: only the current round's params stay live
             _append_record(plan, history, t, lambda p=params: p,
                            eval_fn, eval_every)
@@ -318,26 +394,40 @@ class MeshEngine:
         A_seq, tau_seq, m_seq, eta_seq, active_seq = _device_columns(plan)
         history = History(algorithm=plan.algorithm,
                           ledger=CommLedger(energy_ratio=energy_ratio))
+        quant, qstate = _quant_setup(cfg, plan, params, self.backend,
+                                     mesh=cfg.mesh)
 
         if cfg.scan:
             scanned = make_scanned_train_steps(
                 cfg.model_cfg, cfg.mesh, K, mixing=self.backend,
-                jit=cfg.jit)
+                jit=cfg.jit, quant=quant)
             tokens_seq = jax.tree.map(lambda *bs: jnp.stack(bs), *batches)
-            params, params_seq = scanned(params, tokens_seq, A_seq,
-                                         tau_seq, m_seq, eta_seq,
-                                         active_seq=active_seq)
+            if quant is not None:
+                params, params_seq, _ = scanned(params, tokens_seq, A_seq,
+                                                tau_seq, m_seq, eta_seq,
+                                                active_seq=active_seq,
+                                                qstate=qstate)
+            else:
+                params, params_seq = scanned(params, tokens_seq, A_seq,
+                                             tau_seq, m_seq, eta_seq,
+                                             active_seq=active_seq)
             _fill_history(plan, history,
                           lambda t: jax.tree.map(lambda x: x[t], params_seq),
                           eval_fn, eval_every)
             return params, history
 
         step = make_train_step(cfg.model_cfg, cfg.mesh,
-                               mixing=self.backend, jit=cfg.jit)
+                               mixing=self.backend, jit=cfg.jit,
+                               quant=quant)
         for t in range(K):
             kw = {} if active_seq is None else {"active": active_seq[t]}
-            params = step(params, batches[t], A_seq[t], tau_seq[t],
-                          m_seq[t], eta_seq[t], **kw)
+            if quant is not None:
+                params, qstate = step(params, batches[t], A_seq[t],
+                                      tau_seq[t], m_seq[t], eta_seq[t],
+                                      qstate=qstate, **kw)
+            else:
+                params = step(params, batches[t], A_seq[t], tau_seq[t],
+                              m_seq[t], eta_seq[t], **kw)
             _append_record(plan, history, t, lambda p=params: p,
                            eval_fn, eval_every)
         return params, history

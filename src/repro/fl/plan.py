@@ -100,15 +100,16 @@ from repro.core.sparse import SparseA, SparseAseq
 from repro.topology import TopologySpec
 
 from . import faults as _faults
+from .packing import QuantSpec
 
 __all__ = ["ALGORITHMS", "PlanRow", "RoundPlan", "plan_rows"]
 
 ALGORITHMS = ("semidec", "fedavg", "colrel")
 
-_JSON_VERSION = 4
+_JSON_VERSION = 5
 # v1: pre-topology plans (no embedded spec); v2: no arrival_t column;
-# v3: dense-only A_t
-_JSON_SUPPORTED = (1, 2, 3, 4)
+# v3: dense-only A_t; v4: no quant config
+_JSON_SUPPORTED = (1, 2, 3, 4, 5)
 
 
 def _sample_snapshot(network, rng, t):
@@ -257,6 +258,8 @@ class RoundPlan:
     psi_bound_t: np.ndarray    # (K,)      float64
     # -- streaming bookkeeping (None for synchronous plans) -------------
     arrival_t: Optional[np.ndarray] = None   # (K, n) f32, inf = lost
+    # -- payload compression (None = full-precision wire) ----------------
+    quant: Optional[QuantSpec] = None
     # -- provenance: who generated these columns, and from where --------
     topology: Optional[TopologySpec] = None   # embedded topology spec
     seed: Optional[int] = None     # planning seed (None: external rng)
@@ -283,6 +286,10 @@ class RoundPlan:
                     f"{self.arrival_t.shape}")
             if (self.arrival_t < 0).any():
                 raise ValueError("arrival_t must be non-negative")
+        if self.quant is not None and not isinstance(self.quant, QuantSpec):
+            raise ValueError(
+                "quant must be a repro.fl.packing.QuantSpec (or None), "
+                f"got {type(self.quant).__name__}")
         if self.algorithm not in ALGORITHMS:
             raise ValueError(f"algorithm must be one of {ALGORITHMS}")
         if self.t0 < 0:
@@ -531,6 +538,22 @@ class RoundPlan:
         return self.with_active(
             _faults.cluster_active(rng, K, partition, n, rate))
 
+    # -- payload-compression transform ---------------------------------------
+
+    def with_quant(self, quant: Optional[QuantSpec]) -> "RoundPlan":
+        """Attach (or clear, with None) the payload quantization config.
+
+        Pure execution metadata -- no column changes: engines that run a
+        quant-carrying plan quantize every client upload under this spec
+        (error-feedback residuals threaded across the plan's rounds) and
+        the comm benchmarks price the wire at the compressed width.  An
+        explicit ``ExecutionConfig.quant`` overrides the plan's."""
+        if quant is not None and not isinstance(quant, QuantSpec):
+            raise ValueError(
+                "quant must be a repro.fl.packing.QuantSpec (or None), "
+                f"got {type(quant).__name__}")
+        return dataclasses.replace(self, quant=quant)
+
     # -- streaming transforms ------------------------------------------------
 
     def with_arrivals(self, arrival_t: Optional[np.ndarray]
@@ -675,6 +698,7 @@ class RoundPlan:
                           [[None if not math.isfinite(v) else v
                             for v in row]
                            for row in self.arrival_t.tolist()]),
+            "quant": (None if self.quant is None else self.quant.as_dict()),
         }
         return json.dumps(payload)
 
@@ -723,6 +747,9 @@ class RoundPlan:
                                     for v in row]
                                    for row in d["arrival_t"]],
                                   np.float32)),
+            # absent in v<=4 payloads: older plans load as unquantized
+            quant=(None if d.get("quant") is None
+                   else QuantSpec.from_dict(d["quant"])),
         )
 
     def save(self, path: str) -> None:
@@ -738,6 +765,8 @@ class RoundPlan:
 
     def allclose(self, other: "RoundPlan", exact: bool = True) -> bool:
         if self.algorithm != other.algorithm:
+            return False
+        if self.quant != other.quant:   # frozen dataclass: field-wise eq
             return False
         for f in dataclasses.fields(self):
             a, b = getattr(self, f.name), getattr(other, f.name)

@@ -197,6 +197,13 @@ class StreamEngine:
                 energy_ratio=0.1):
         from .engine import _check_batches
         _check_batches(plan, batches)
+        if plan.quant is not None:
+            raise ValueError(
+                "quantized payloads are not supported on the stream "
+                "runtime: stale cohorts re-aggregate deltas from earlier "
+                "rounds, which has no well-defined error-feedback "
+                "residual; strip with plan.with_quant(None) or run on "
+                "LocalEngine/MeshEngine")
         cfg, S = self.cfg, self.stream
         plan, trace = self._apply_faults(plan)
         self.last_trace = trace

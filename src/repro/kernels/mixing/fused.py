@@ -44,11 +44,14 @@ automatically on TPU (``repro.kernels.dispatch.default_interpret``).
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["mix_aggregate_pallas", "aggregate_pallas"]
+__all__ = ["mix_aggregate_pallas", "aggregate_pallas", "dequant_tile",
+           "mix_aggregate_dequant_pallas", "aggregate_dequant_pallas"]
 
 
 def _fused_kernel(a_ref, w_ref, x_ref, mixed_ref, agg_ref):
@@ -125,3 +128,133 @@ def aggregate_pallas(w: jnp.ndarray, X: jnp.ndarray, *, chunk: int = 2048,
         out_shape=jax.ShapeDtypeStruct((s, p), jnp.float32),
         interpret=interpret,
     )(w, X)
+
+
+# ---------------------------------------------------------------------------
+# Quantized-payload variants: the SAME one-pass schedules, with a dequant
+# epilogue fused in front of the fp32 matmuls.  The payload tile arrives in
+# its wire format (int8 / nibble-packed int4 / fp8 -- ``repro.fl.packing
+# .QuantSpec``), the tiny per-block fp32 scale tile rides along as a side
+# operand, and the dequantized fp32 values exist only inside VMEM -- no
+# dequantized (n, p) payload is ever materialized in HBM.  Mixed AND
+# aggregate outputs are fp32 (the accumulator dtype): casting the mixed
+# deltas back to a payload dtype is the caller's epilogue if it wants one.
+# ---------------------------------------------------------------------------
+
+
+def dequant_tile(x: jnp.ndarray, scales: jnp.ndarray, *, storage: str,
+                 block: int) -> jnp.ndarray:
+    """In-register dequant of one payload tile.
+
+    ``x`` is the stored tile -- (n, pc) for int8/fp8, (n, pc // 2)
+    nibble-packed int8 for 'int4' (low nibble = even column) --
+    ``scales`` the matching (n, pc // block) fp32 scale tile.  Returns
+    the (n, pc) fp32 values ``stored * scale``, the same arithmetic as
+    ``repro.fl.packing.dequantize_group`` (host round-trips match the
+    kernel path bitwise)."""
+    n = x.shape[0]
+    if storage == "int4":
+        lo = (x << 4) >> 4        # sign-extend both nibbles of each byte
+        hi = x >> 4
+        v = jnp.stack([lo, hi], axis=-1).reshape(n, -1).astype(jnp.float32)
+    else:
+        v = x.astype(jnp.float32)
+    nb = scales.shape[1]
+    v = v.reshape(n, nb, block) * scales[:, :, None].astype(jnp.float32)
+    return v.reshape(n, nb * block)
+
+
+def _fused_dequant_kernel(a_ref, w_ref, x_ref, s_ref, mixed_ref, agg_ref,
+                          *, storage, block):
+    a = a_ref[...].astype(jnp.float32)          # (n_pad, n_pad), resident
+    w = w_ref[...].astype(jnp.float32)          # (s, n_pad), resident
+    x = dequant_tile(x_ref[...], s_ref[...], storage=storage, block=block)
+    dims = (((1,), (0,)), ((), ()))
+    mixed_ref[...] = jax.lax.dot_general(
+        a, x, dims, preferred_element_type=jnp.float32)
+    agg_ref[...] = jax.lax.dot_general(
+        w, x, dims, preferred_element_type=jnp.float32)
+
+
+def _agg_dequant_kernel(w_ref, x_ref, s_ref, agg_ref, *, storage, block):
+    w = w_ref[...].astype(jnp.float32)          # (s, n_pad), resident
+    x = dequant_tile(x_ref[...], s_ref[...], storage=storage, block=block)
+    agg_ref[...] = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+def _quant_grid(Xq, S, storage, block, chunk):
+    """Shared shape plumbing for the dequant kernels: payload width in
+    *value* columns, container columns per chunk, scale blocks per
+    chunk."""
+    assert chunk % block == 0, (chunk, block)
+    p = S.shape[1] * block                       # value columns
+    qcols = chunk // 2 if storage == "int4" else chunk
+    assert Xq.shape[1] * (2 if storage == "int4" else 1) == p, \
+        (Xq.shape, S.shape, block)
+    assert p % chunk == 0, (p, chunk)
+    return p, qcols, chunk // block
+
+
+def mix_aggregate_dequant_pallas(A: jnp.ndarray, w: jnp.ndarray,
+                                 Xq: jnp.ndarray, S: jnp.ndarray, *,
+                                 storage: str, block: int,
+                                 chunk: int = 2048, interpret: bool = True):
+    """One-pass fused mix + aggregate over a quantized payload.
+
+    A (n_pad, n_pad); w (s, n_pad) with the combine row in w[0]; Xq the
+    stored containers (n_pad, p_pad * bits / 8); S the fp32 scales
+    (n_pad, p_pad / block).  Returns ``(mixed, agg)``, both fp32:
+    (n_pad, p_pad) and (s, p_pad)."""
+    n = Xq.shape[0]
+    s = w.shape[0]
+    p, qcols, sblocks = _quant_grid(Xq, S, storage, block, chunk)
+    assert A.shape == (n, n) and w.shape == (s, n), (A.shape, w.shape)
+    grid = (p // chunk,)
+    return pl.pallas_call(
+        functools.partial(_fused_dequant_kernel, storage=storage,
+                          block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),        # A resident
+            pl.BlockSpec((s, n), lambda i: (0, 0)),        # w resident
+            pl.BlockSpec((n, qcols), lambda i: (0, i)),    # stored payload
+            pl.BlockSpec((n, sblocks), lambda i: (0, i)),  # scale side buf
+        ],
+        out_specs=[
+            pl.BlockSpec((n, chunk), lambda i: (0, i)),
+            pl.BlockSpec((s, chunk), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, p), jnp.float32),
+            jax.ShapeDtypeStruct((s, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(A, w, Xq, S)
+
+
+def aggregate_dequant_pallas(w: jnp.ndarray, Xq: jnp.ndarray,
+                             S: jnp.ndarray, *, storage: str, block: int,
+                             chunk: int = 2048,
+                             interpret: bool = True) -> jnp.ndarray:
+    """Aggregate-only dequant variant: ``w @ dequant(Xq, S)`` streaming
+    the *compressed* payload once; neither the mixed deltas nor the
+    dequantized payload ever exist in HBM.  Returns (s, p_pad) fp32."""
+    n = Xq.shape[0]
+    s = w.shape[0]
+    p, qcols, sblocks = _quant_grid(Xq, S, storage, block, chunk)
+    assert w.shape == (s, n), (w.shape, Xq.shape)
+    grid = (p // chunk,)
+    return pl.pallas_call(
+        functools.partial(_agg_dequant_kernel, storage=storage,
+                          block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s, n), lambda i: (0, 0)),        # w resident
+            pl.BlockSpec((n, qcols), lambda i: (0, i)),    # stored payload
+            pl.BlockSpec((n, sblocks), lambda i: (0, i)),  # scale side buf
+        ],
+        out_specs=pl.BlockSpec((s, chunk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((s, p), jnp.float32),
+        interpret=interpret,
+    )(w, Xq, S)

@@ -37,10 +37,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.dispatch import default_interpret, resolve_interpret
-from .fused import aggregate_pallas, mix_aggregate_pallas
+from .fused import (aggregate_dequant_pallas, aggregate_pallas,
+                    mix_aggregate_dequant_pallas, mix_aggregate_pallas)
 from .mixing import mix_pallas
 from .ref import mix_ref
-from .sparse import sparse_mix_aggregate_pallas, sparse_mix_pallas
+from .sparse import (sparse_mix_aggregate_dequant_pallas,
+                     sparse_mix_aggregate_pallas, sparse_mix_pallas)
 
 PyTree = Any
 
@@ -49,6 +51,10 @@ __all__ = ["mix", "mix_pytree", "mix_aggregate", "aggregate",
            "combine_weights", "combine_weights_ell",
            "sparse_mix", "sparse_mix_aggregate", "sparse_aggregate",
            "sparse_mix_aggregate_grouped", "sparse_aggregate_grouped",
+           "mix_aggregate_q", "aggregate_q",
+           "mix_aggregate_grouped_q", "aggregate_grouped_q",
+           "sparse_mix_aggregate_q", "sparse_aggregate_q",
+           "sparse_mix_aggregate_grouped_q", "sparse_aggregate_grouped_q",
            "default_interpret"]
 
 _LANE = 128
@@ -272,6 +278,126 @@ def aggregate_grouped(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
 
 
 # --------------------------------------------------------------------------
+# Quantized-payload entry points (``_q`` suffix): the same one-pass
+# schedules over a wire-format payload (``repro.fl.packing.QuantSpec``) --
+# stored containers + fp32 per-block scale side buffers in, fp32 mixed /
+# aggregate out, dequantization fused into the kernels' VMEM epilogue.
+# ``quant`` is the (hashable, jit-static) QuantSpec.
+# --------------------------------------------------------------------------
+
+
+def _check_quant_chunk(quant, chunk: int) -> None:
+    if chunk % quant.block:
+        raise ValueError(
+            f"chunk ({chunk}) must be a multiple of quant.block "
+            f"({quant.block}) so every payload tile covers whole scale "
+            "blocks")
+
+
+def _pad_quant_inputs(Xq, S, quant, chunk):
+    """Pad the stored payload + scales to TPU tile alignment.  Padded
+    container columns are zero bytes (two zero nibbles for int4) and
+    padded scale blocks are 0.0, so the padding dequantizes to exact
+    zeros.  Returns ``(Xq_p, S_p, n, p)`` with ``p`` the real *value*
+    column count."""
+    n, pq = Xq.shape
+    p = S.shape[1] * quant.block
+    n_pad = _pad_to(n, _SUBLANE)
+    p_pad = _pad_to(p, chunk)
+    Xq_p = jnp.zeros((n_pad, quant.stored_cols(p_pad)),
+                     Xq.dtype).at[:n, :pq].set(Xq)
+    S_p = jnp.zeros((n_pad, p_pad // quant.block),
+                    jnp.float32).at[:n, :S.shape[1]].set(S)
+    return Xq_p, S_p, n, p
+
+
+@functools.partial(jax.jit, static_argnames=("quant", "chunk", "interpret"))
+def mix_aggregate_q(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
+                    Xq: jnp.ndarray, S: jnp.ndarray, *, quant,
+                    chunk: int = 2048, interpret: Optional[bool] = None,
+                    active: Optional[jnp.ndarray] = None,
+                    weights: Optional[jnp.ndarray] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused eq. 3 + eq. 4 over one quantized group buffer.
+
+    ``Xq`` (n, P * bits / 8) stored containers, ``S`` (n, P / block)
+    fp32 scales (``repro.fl.packing.quantize_group``).  Returns
+    ``(mixed, agg)``: the fp32 (n, P) mixed deltas and the fp32 (P,)
+    aggregate row.  A straggler mask zeroes dropped clients out of the
+    *aggregate* leg only (combine row); callers that also need masked
+    mixed output zero the dropped rows of ``S`` first -- one multiply on
+    the tiny scale buffer, never on the payload."""
+    _check_quant_chunk(quant, chunk)
+    interpret = resolve_interpret(interpret)
+    Xq_p, S_p, n, p = _pad_quant_inputs(Xq, S, quant, chunk)
+    n_pad = Xq_p.shape[0]
+    A_p = jnp.zeros((n_pad, n_pad), A.dtype).at[:n, :n].set(A)
+    w_p = _weight_row(A, tau, m, n_pad, active, weights)
+    mixed, agg = mix_aggregate_dequant_pallas(
+        A_p, w_p, Xq_p, S_p, storage=quant.storage, block=quant.block,
+        chunk=chunk, interpret=interpret)
+    return mixed[:n, :p], agg[0, :p]
+
+
+@functools.partial(jax.jit, static_argnames=("quant", "chunk", "interpret"))
+def aggregate_q(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
+                Xq: jnp.ndarray, S: jnp.ndarray, *, quant,
+                chunk: int = 2048, interpret: Optional[bool] = None,
+                active: Optional[jnp.ndarray] = None,
+                weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Aggregate-only fast path over one quantized group buffer: the
+    fp32 row ``((tau^T A)/m) @ dequant(Xq, S)`` (P,), streaming the
+    compressed payload once -- neither the mixed deltas nor a
+    dequantized payload ever exist."""
+    _check_quant_chunk(quant, chunk)
+    interpret = resolve_interpret(interpret)
+    Xq_p, S_p, n, p = _pad_quant_inputs(Xq, S, quant, chunk)
+    w_p = _weight_row(A, tau, m, Xq_p.shape[0], active, weights)
+    agg = aggregate_dequant_pallas(
+        w_p, Xq_p, S_p, storage=quant.storage, block=quant.block,
+        chunk=chunk, interpret=interpret)
+    return agg[0, :p]
+
+
+@functools.partial(jax.jit, static_argnames=("quant", "chunk", "interpret"))
+def mix_aggregate_grouped_q(A: jnp.ndarray, tau: jnp.ndarray,
+                            m: jnp.ndarray,
+                            stored: Tuple[jnp.ndarray, ...],
+                            scales: Tuple[jnp.ndarray, ...], *, quant,
+                            chunk: int = 2048,
+                            interpret: Optional[bool] = None,
+                            active: Optional[jnp.ndarray] = None,
+                            weights: Optional[jnp.ndarray] = None
+                            ) -> Tuple[Tuple[jnp.ndarray, ...],
+                                       Tuple[jnp.ndarray, ...]]:
+    """``mix_aggregate_grouped`` over the wire format: one fused
+    dequant launch per group (``repro.fl.packing.quantize_packed``
+    output).  Returns per-group fp32 ``(mixed_bufs, agg_rows)``."""
+    out = [mix_aggregate_q(A, tau, m, xq, s, quant=quant, chunk=chunk,
+                           interpret=interpret, active=active,
+                           weights=weights)
+           for xq, s in zip(stored, scales)]
+    return tuple(mb for mb, _ in out), tuple(r for _, r in out)
+
+
+@functools.partial(jax.jit, static_argnames=("quant", "chunk", "interpret"))
+def aggregate_grouped_q(A: jnp.ndarray, tau: jnp.ndarray, m: jnp.ndarray,
+                        stored: Tuple[jnp.ndarray, ...],
+                        scales: Tuple[jnp.ndarray, ...], *, quant,
+                        chunk: int = 2048,
+                        interpret: Optional[bool] = None,
+                        active: Optional[jnp.ndarray] = None,
+                        weights: Optional[jnp.ndarray] = None
+                        ) -> Tuple[jnp.ndarray, ...]:
+    """``aggregate_grouped`` over the wire format: per-group fp32 rows,
+    one aggregate-dequant launch per group."""
+    return tuple(aggregate_q(A, tau, m, xq, s, quant=quant, chunk=chunk,
+                             interpret=interpret, active=active,
+                             weights=weights)
+                 for xq, s in zip(stored, scales))
+
+
+# --------------------------------------------------------------------------
 # Sparse (ELL) entry points -- A as padded neighbor lists
 # (``repro.core.sparse.SparseA.ell()``), never an (n, n) array.
 # --------------------------------------------------------------------------
@@ -388,3 +514,87 @@ def sparse_aggregate_grouped(idx: jnp.ndarray, w: jnp.ndarray,
                                   interpret=interpret, active=active,
                                   weights=weights)
                  for b in bufs)
+
+
+@functools.partial(jax.jit, static_argnames=("quant", "chunk", "interpret"))
+def sparse_mix_aggregate_q(idx: jnp.ndarray, w: jnp.ndarray,
+                           tau: jnp.ndarray, m: jnp.ndarray,
+                           Xq: jnp.ndarray, S: jnp.ndarray, *, quant,
+                           chunk: int = 2048,
+                           interpret: Optional[bool] = None,
+                           active: Optional[jnp.ndarray] = None,
+                           weights: Optional[jnp.ndarray] = None
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sparse fused eq. 3 + eq. 4 over one quantized group buffer: ELL
+    gather + combine-row product over values dequantized in VMEM.
+    Mask/weight semantics match ``mix_aggregate_q``."""
+    _check_quant_chunk(quant, chunk)
+    interpret = resolve_interpret(interpret)
+    Xq_p, S_p, n, p = _pad_quant_inputs(Xq, S, quant, chunk)
+    n_pad = Xq_p.shape[0]
+    d = idx.shape[1]
+    idx_p = jnp.zeros((n_pad, d), jnp.int32).at[:n].set(idx)
+    w_p = jnp.zeros((n_pad, d), jnp.float32).at[:n].set(w)
+    wrow_p = _sparse_weight_row(idx, w, tau, m, n_pad, active, weights)
+    mixed, agg = sparse_mix_aggregate_dequant_pallas(
+        idx_p, w_p, wrow_p, Xq_p, S_p, storage=quant.storage,
+        block=quant.block, chunk=chunk, interpret=interpret)
+    return mixed[:n, :p], agg[0, :p]
+
+
+@functools.partial(jax.jit, static_argnames=("quant", "chunk", "interpret"))
+def sparse_aggregate_q(idx: jnp.ndarray, w: jnp.ndarray, tau: jnp.ndarray,
+                       m: jnp.ndarray, Xq: jnp.ndarray, S: jnp.ndarray, *,
+                       quant, chunk: int = 2048,
+                       interpret: Optional[bool] = None,
+                       active: Optional[jnp.ndarray] = None,
+                       weights: Optional[jnp.ndarray] = None
+                       ) -> jnp.ndarray:
+    """Sparse aggregate-only dequant path: the combine row is the same
+    O(nnz) segment-sum, after which the aggregate-dequant kernel streams
+    the compressed payload -- no new sparse kernel needed."""
+    _check_quant_chunk(quant, chunk)
+    interpret = resolve_interpret(interpret)
+    Xq_p, S_p, n, p = _pad_quant_inputs(Xq, S, quant, chunk)
+    wrow_p = _sparse_weight_row(idx, w, tau, m, Xq_p.shape[0], active,
+                                weights)
+    agg = aggregate_dequant_pallas(
+        wrow_p, Xq_p, S_p, storage=quant.storage, block=quant.block,
+        chunk=chunk, interpret=interpret)
+    return agg[0, :p]
+
+
+@functools.partial(jax.jit, static_argnames=("quant", "chunk", "interpret"))
+def sparse_mix_aggregate_grouped_q(idx: jnp.ndarray, w: jnp.ndarray,
+                                   tau: jnp.ndarray, m: jnp.ndarray,
+                                   stored: Tuple[jnp.ndarray, ...],
+                                   scales: Tuple[jnp.ndarray, ...], *,
+                                   quant, chunk: int = 2048,
+                                   interpret: Optional[bool] = None,
+                                   active: Optional[jnp.ndarray] = None,
+                                   weights: Optional[jnp.ndarray] = None
+                                   ) -> Tuple[Tuple[jnp.ndarray, ...],
+                                              Tuple[jnp.ndarray, ...]]:
+    """``sparse_mix_aggregate_grouped`` over the wire format."""
+    out = [sparse_mix_aggregate_q(idx, w, tau, m, xq, s, quant=quant,
+                                  chunk=chunk, interpret=interpret,
+                                  active=active, weights=weights)
+           for xq, s in zip(stored, scales)]
+    return tuple(mb for mb, _ in out), tuple(r for _, r in out)
+
+
+@functools.partial(jax.jit, static_argnames=("quant", "chunk", "interpret"))
+def sparse_aggregate_grouped_q(idx: jnp.ndarray, w: jnp.ndarray,
+                               tau: jnp.ndarray, m: jnp.ndarray,
+                               stored: Tuple[jnp.ndarray, ...],
+                               scales: Tuple[jnp.ndarray, ...], *, quant,
+                               chunk: int = 2048,
+                               interpret: Optional[bool] = None,
+                               active: Optional[jnp.ndarray] = None,
+                               weights: Optional[jnp.ndarray] = None
+                               ) -> Tuple[jnp.ndarray, ...]:
+    """``sparse_aggregate_grouped`` over the wire format."""
+    return tuple(sparse_aggregate_q(idx, w, tau, m, xq, s, quant=quant,
+                                    chunk=chunk, interpret=interpret,
+                                    active=active, weights=weights)
+                 for xq, s in zip(stored, scales))

@@ -49,7 +49,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["sparse_mix_pallas", "sparse_mix_aggregate_pallas"]
+__all__ = ["sparse_mix_pallas", "sparse_mix_aggregate_pallas",
+           "sparse_mix_aggregate_dequant_pallas"]
 
 
 def _gather_mix(idx, w, x):
@@ -140,3 +141,65 @@ def sparse_mix_aggregate_pallas(idx: jnp.ndarray, w: jnp.ndarray,
         ],
         interpret=interpret,
     )(idx, w, wrow, X)
+
+
+def _sparse_fused_dequant_kernel(idx_ref, w_ref, wrow_ref, x_ref, s_ref,
+                                 mixed_ref, agg_ref, *, storage, block):
+    # deferred to dodge a cycle: fused imports nothing from here, but the
+    # package inits ops -> fused before sparse
+    from .fused import dequant_tile
+
+    idx = idx_ref[...]
+    w = w_ref[...].astype(jnp.float32)
+    wrow = wrow_ref[...].astype(jnp.float32)    # (s, n_pad), resident
+    x = dequant_tile(x_ref[...], s_ref[...], storage=storage, block=block)
+    mixed_ref[...] = _gather_mix(idx, w, x)
+    agg_ref[...] = jax.lax.dot_general(
+        wrow, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def sparse_mix_aggregate_dequant_pallas(idx: jnp.ndarray, w: jnp.ndarray,
+                                        wrow: jnp.ndarray, Xq: jnp.ndarray,
+                                        S: jnp.ndarray, *, storage: str,
+                                        block: int, chunk: int = 2048,
+                                        interpret: bool = True):
+    """One-pass sparse mix + D2S aggregate over a *quantized* payload:
+    the ELL gather and the combine-row product both consume the fp32
+    values dequantized in VMEM (``fused.dequant_tile``) -- the wire
+    format (``Xq`` stored containers + ``S`` fp32 per-block scales) is
+    what streams through HBM.  Returns ``(mixed, agg)``, both fp32:
+    (n_pad, p_pad) and (s, p_pad).  The aggregate-only sparse path needs
+    no kernel here: the sparsely-built combine row feeds
+    ``fused.aggregate_dequant_pallas`` (see ``ops.sparse_aggregate_q``).
+    """
+    from .fused import _quant_grid
+
+    n = Xq.shape[0]
+    d = idx.shape[1]
+    s = wrow.shape[0]
+    p, qcols, sblocks = _quant_grid(Xq, S, storage, block, chunk)
+    assert idx.shape == (n, d) and w.shape == (n, d), (idx.shape, w.shape)
+    assert wrow.shape == (s, n), (wrow.shape, Xq.shape)
+    grid = (p // chunk,)
+    return pl.pallas_call(
+        functools.partial(_sparse_fused_dequant_kernel, storage=storage,
+                          block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, d), lambda i: (0, 0)),        # idx resident
+            pl.BlockSpec((n, d), lambda i: (0, 0)),        # w resident
+            pl.BlockSpec((s, n), lambda i: (0, 0)),        # wrow resident
+            pl.BlockSpec((n, qcols), lambda i: (0, i)),    # stored payload
+            pl.BlockSpec((n, sblocks), lambda i: (0, i)),  # scale side buf
+        ],
+        out_specs=[
+            pl.BlockSpec((n, chunk), lambda i: (0, i)),
+            pl.BlockSpec((s, chunk), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, p), jnp.float32),
+            jax.ShapeDtypeStruct((s, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idx, w, wrow, Xq, S)

@@ -109,6 +109,20 @@ def main(argv=None) -> int:
                          "planning here")
     ap.add_argument("--plan-out", default="",
                     help="save the executed RoundPlan as JSON")
+    ap.add_argument("--quant", default="",
+                    choices=["", "int8", "int4", "fp8"],
+                    help="quantize client payloads to this storage "
+                         "(empty = full-precision wire)")
+    ap.add_argument("--quant-block", type=int, default=512,
+                    help="values per absmax scale block (int4 needs a "
+                         "multiple of 256, others of 128)")
+    ap.add_argument("--quant-rounding", default="nearest",
+                    choices=["nearest", "stochastic"],
+                    help="quantizer rounding mode (stochastic: int "
+                         "grids only)")
+    ap.add_argument("--no-error-feedback", action="store_true",
+                    help="drop the round-trip residual instead of "
+                         "carrying it into the next round's quantization")
     ap.add_argument("--out", default="")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
@@ -144,10 +158,18 @@ def main(argv=None) -> int:
         T=args.T, t_max=args.rounds, phi_max=args.phi_max,
         m_fixed=args.m, seed=args.seed,
         eta=lambda t: args.lr0 * (args.lr_decay ** t))
+    quant = None
+    if args.quant:
+        from repro.fl.packing import QuantSpec
+        quant = QuantSpec(storage=args.quant, block=args.quant_block,
+                          rounding=args.quant_rounding,
+                          error_feedback=not args.no_error_feedback,
+                          seed=args.seed)
     server = FederatedServer(network, loss_fn, params, batcher, cfg,
                              algorithm=args.algorithm,
                              execution=ExecutionConfig(
-                                 backend=args.backend, scan=args.scan))
+                                 backend=args.backend, scan=args.scan,
+                                 quant=quant))
     plan = RoundPlan.load(args.plan) if args.plan else None
     if args.dropout > 0:
         if plan is None:
@@ -171,7 +193,12 @@ def main(argv=None) -> int:
             plan = plan.with_dropout(args.dropout, drop_rng)
     history = server.run(eval_fn=eval_fn, plan=plan)
     if args.plan_out:
-        server.last_plan.save(args.plan_out)
+        out_plan = server.last_plan
+        if quant is not None and out_plan.quant is None:
+            # fold the wire format into the artifact so a --plan replay
+            # reproduces the quantized run without re-passing the flags
+            out_plan = out_plan.with_quant(quant)
+        out_plan.save(args.plan_out)
         print(f"trajectory saved to {args.plan_out}")
 
     rows = []

@@ -10,13 +10,16 @@ import pytest
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks.run import check_baseline  # noqa: E402
+from benchmarks.run import _row_key, check_baseline  # noqa: E402
 
 
 KERNEL_ROW = dict(n=16, p=65536, dtype="bfloat16",
                   bytes_fused=100, bytes_agg_only=60, us_fused_interp=1.0)
 GROUPED_ROW = dict(kind="grouped_payload", layout="bf16-majority-lm", n=16,
                    bytes_grouped=50, us_agg_grouped_interp=2.0)
+QUANT_ROW = dict(kind="quant_payload", layout="bf16-majority-lm", n=16,
+                 storage="int4", bytes_grouped=50, bytes_quantized=13,
+                 us_agg_quant_interp=3.0)
 
 
 @pytest.fixture
@@ -59,3 +62,42 @@ def test_empty_baseline_fails(tmp_path):
     path.write_text(json.dumps({"mixing_kernel": []}))
     problems = check_baseline([KERNEL_ROW], str(path))
     assert problems and "baseline stale" in problems[0]
+
+
+def test_quant_rows_keyed_by_storage():
+    """Two quant rows on the same layout/n but different storage must be
+    distinct baseline entries."""
+    int8 = dict(QUANT_ROW, storage="int8")
+    assert _row_key(QUANT_ROW) != _row_key(int8)
+    assert _row_key(QUANT_ROW) == _row_key(dict(QUANT_ROW))
+
+
+def test_quant_byte_regression_fails(tmp_path):
+    path = tmp_path / "b.json"
+    path.write_text(json.dumps({"mixing_kernel": [QUANT_ROW]}))
+    worse = dict(QUANT_ROW, bytes_quantized=14)
+    problems = check_baseline([worse], str(path))
+    assert len(problems) == 1 and "bytes_quantized" in problems[0]
+    assert check_baseline([dict(QUANT_ROW)], str(path)) == []
+
+
+def test_byte_fields_compare_as_integers(tmp_path):
+    """float-representation jitter (100 vs 100.0) must not trip the gate,
+    and a genuinely non-integral byte count is itself an error."""
+    path = tmp_path / "b.json"
+    path.write_text(json.dumps({"mixing_kernel": [KERNEL_ROW]}))
+    as_float = dict(KERNEL_ROW, bytes_fused=100.0, bytes_agg_only=60.0)
+    assert check_baseline([as_float], str(path)) == []
+
+    fractional = dict(KERNEL_ROW, bytes_fused=99.5)
+    problems = check_baseline([fractional], str(path))
+    assert problems and "non-integral" in problems[0]
+
+
+def test_stats_report_rows_and_fields(baseline):
+    stats = {}
+    assert check_baseline([KERNEL_ROW, GROUPED_ROW], baseline,
+                          stats=stats) == []
+    # KERNEL_ROW pins bytes_fused + bytes_agg_only, GROUPED_ROW pins
+    # bytes_grouped: 2 rows, 3 byte-field comparisons
+    assert stats == {"rows_checked": 2, "fields_compared": 3}

@@ -133,14 +133,25 @@ def test_stream_rejects_sparse_backends():
 # ---------------------------------------------------------------------------
 
 
-def test_json_v4_csr_round_trip():
+def test_json_csr_round_trip():
     _, plan = _plans("erdos_renyi", "iid")
     text = plan.to_json()
     payload = json.loads(text)
-    assert payload["version"] == 4
+    assert payload["version"] == 5      # v4 added CSR; v5 added quant
     assert payload["A_t"]["encoding"] == "csr"
     back = RoundPlan.from_json(text)
     assert back.is_sparse
+    assert back.allclose(plan)
+
+
+def test_json_v4_payload_still_loads():
+    """A pre-quant (v4) payload loads as an unquantized plan."""
+    _, plan = _plans("erdos_renyi", "iid")
+    payload = json.loads(plan.to_json())
+    payload["version"] = 4
+    payload.pop("quant", None)
+    back = RoundPlan.from_json(json.dumps(payload))
+    assert back.is_sparse and back.quant is None
     assert back.allclose(plan)
 
 
