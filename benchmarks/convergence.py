@@ -93,8 +93,7 @@ def run(rounds: int = 40, n: int = 70, clusters: int = 7, T: int = 5,
 
     gap0 = _sq_dist(params0, x_star)
     ts = np.arange(1, len(gaps) + 1)
-    envelope = np.array([gap_bound(consts, phi_max, gap0, int(t))
-                         for t in ts])
+    envelope = gap_bound(consts, phi_max, gap0, ts)
 
     # O(1/t) check: fit gap ~ C/t on the second half; report R of the fit
     tail = slice(len(gaps) // 2, None)

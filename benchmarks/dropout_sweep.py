@@ -17,10 +17,18 @@ mean staleness of what the server aggregated, and d2s-per-accuracy.
 with int8+error-feedback quantized uplinks vs the fp32 wire, reporting
 uplink bytes per unit accuracy (``dropout_sweep_quant`` rows).
 
+``run_adaptive`` closes the loop (``repro.control``): the ``threshold``
+controller re-inverts the sampling bound against the *realized*
+per-cluster connectivity each round, vs the open-loop ``static``
+baseline that sticks to the precomputed degree-stat plan.  Rows report
+final accuracy, total D2S/D2D, and the cumulative D2S spent to first
+reach a target accuracy -- the win case is families whose degree-stat
+bounds are loose (hubs), where realized phi admits a smaller m.
+
 Rows land in BENCH_mixing.json under ``dropout_sweep`` /
-``staleness_sweep`` (the payload-byte fields gated by
-``--check-baseline`` are untouched -- these rows are comm-count models,
-not kernel measurements).
+``staleness_sweep`` / ``adaptive_sweep`` (the payload-byte fields gated
+by ``--check-baseline`` are untouched -- these rows are comm-count
+models, not kernel measurements).
 """
 
 from __future__ import annotations
@@ -37,7 +45,8 @@ from repro.fl import ExecutionConfig, RoundPlan, StreamConfig, \
     parse_fault_spec
 from repro.models import cnn as cnn_lib
 
-__all__ = ["run", "run_quant", "run_staleness", "FAMILIES", "LATENCIES"]
+__all__ = ["run", "run_adaptive", "run_quant", "run_staleness",
+           "ADAPTIVE_FAMILIES", "FAMILIES", "LATENCIES"]
 
 # small-but-distinct representatives of each registered family
 FAMILIES = (
@@ -209,6 +218,104 @@ def run_quant(rates=(0.0, 0.2), rounds: int = 6, n: int = 24,
         print("\nint8+EF uploads ~1/4 of the fp32 bytes at matched "
               "message counts; the accuracy column shows what (if "
               "anything) the quantizer costs.")
+    return rows
+
+
+# workloads for the closed-loop comparison: one where degree-stat
+# bounds are already tight (k-regular) and one where they are loose
+# (hub -- the star center inflates d_max far above typical degrees, so
+# realized phi admits a smaller m than the precomputed plan's)
+ADAPTIVE_FAMILIES = (
+    "k_regular:k_range=4-6,p_fail=0.1",
+    "hub:hubs=1",
+)
+
+
+def _d2s_to_target(records, target: float):
+    """Cumulative D2S uploads at the first round whose test accuracy
+    reaches ``target`` (requires eval_every=1); None if never reached."""
+    cum = 0
+    for rec in records:
+        cum += int(rec.d2s)
+        acc = rec.metrics.get("test_acc")
+        if acc is not None and float(acc) >= target:
+            return cum
+    return None
+
+
+def run_adaptive(rounds: int = 6, n: int = 24, clusters: int = 3,
+                 samples: int = 1200, seed: int = 0,
+                 phi_max: float = 0.3, noise: float = 6.0,
+                 target_frac: float = 0.95, quiet: bool = False):
+    """Closed-loop connectivity control vs the open-loop plan.
+
+    Both runs go through the controller path (``repro.control``) on the
+    same data, topology sequence, and seed, so the only difference is
+    the per-round m decision: ``static`` replays the precomputed
+    degree-stat rule, ``threshold`` inverts the sampling bound against
+    the realized per-cluster phi.  The target accuracy per family is
+    ``target_frac`` of the static run's final accuracy; both rows then
+    report the D2S spend to first reach it."""
+    rng = np.random.default_rng(seed)
+    ds_train = make_classification(n_samples=samples, noise=noise,
+                                   seed=seed)
+    ds_test = make_classification(n_samples=samples // 4, noise=noise,
+                                  seed=seed + 1)
+    parts = label_sorted_partition(ds_train, n, shards_per_client=2,
+                                   rng=rng)
+    batcher = FederatedBatcher(ds_train, parts, T=3, batch_size=16)
+    params0 = cnn_lib.init_logreg(seed)
+    loss_fn = partial(cnn_lib.l2_regularized_loss, cnn_lib.logreg_apply)
+
+    import jax.numpy as jnp
+    xs, ys = jnp.asarray(ds_test.x), jnp.asarray(ds_test.y)
+
+    def eval_fn(p):
+        return {"test_acc": cnn_lib.accuracy(cnn_lib.logreg_apply, p,
+                                             xs, ys)}
+
+    rows = []
+    if not quiet:
+        print(f"{'family':>12} {'controller':>10} {'D2S':>5} {'D2D':>6} "
+              f"{'acc':>6} {'d2s@tgt':>8}")
+    for spec_str in ADAPTIVE_FAMILIES:
+        spec = topology.parse_spec(spec_str, n=n, c=clusters)
+        cfg = ServerConfig(T=3, t_max=rounds, phi_max=phi_max, seed=seed,
+                           eta=lambda t: 0.05 * (0.9 ** t))
+        target = None
+        for controller in ("static", "threshold"):
+            # fresh network per run: time-correlated families carry
+            # walker state, and both controllers must see the same
+            # topology sequence for the comparison to isolate m
+            network = spec.build()
+            server = FederatedServer(
+                network, loss_fn, params0, batcher, cfg,
+                algorithm="semidec",
+                execution=ExecutionConfig(backend="aggregate"))
+            hist = server.run(eval_fn=eval_fn, eval_every=1,
+                              controller=controller)
+            acc = float(hist.records[-1].metrics["test_acc"])
+            if target is None:      # static runs first and sets the bar
+                target = target_frac * acc
+            to_target = _d2s_to_target(hist.records, target)
+            d2s, d2d = hist.ledger.total_d2s, hist.ledger.total_d2d
+            rows.append(dict(
+                kind="adaptive_sweep", family=spec.family,
+                controller=controller, rounds=rounds, n=n,
+                phi_max=float(phi_max), final_acc=acc,
+                total_d2s=int(d2s), total_d2d=int(d2d),
+                total_cost=float(hist.ledger.total_cost),
+                target_acc=float(target), d2s_to_target=to_target,
+            ))
+            if not quiet:
+                tgt = "--" if to_target is None else f"{to_target:d}"
+                print(f"{spec.family:>12} {controller:>10} {d2s:5d} "
+                      f"{d2d:6d} {acc:6.3f} {tgt:>8}")
+    if not quiet:
+        print("\nthreshold cuts D2S uploads wherever the realized phi "
+              "beats the degree-stat bound the static plan inverted: "
+              "link failures (k_regular) and skewed degrees (hub) both "
+              "leave slack the closed loop reclaims as a smaller m.")
     return rows
 
 

@@ -4,6 +4,8 @@
   comm_cost       -- Figs. 2-5 (high/low D2S regimes)
   dropout_sweep   -- d2s/d2d-per-accuracy over dropout rate x topology
                      family x straggler model (iid vs bursty Markov)
+  adaptive_sweep  -- closed-loop threshold controller vs the static
+                     plan: D2S spend to a target accuracy
   staleness_sweep -- semi-async StreamEngine: buffer size x upload
                      latency distribution (late/lost/staleness totals)
   convergence     -- Theorem 4.5 O(1/t) envelope
@@ -42,8 +44,8 @@ from . import (comm_cost, convergence, dropout_sweep, mixing_kernel,
                roofline_table, singular_bounds, topology_ablation)
 
 BENCHES = ("singular_bounds", "topology_ablation", "comm_cost",
-           "dropout_sweep", "staleness_sweep", "convergence",
-           "mixing_kernel", "roofline_table")
+           "dropout_sweep", "adaptive_sweep", "staleness_sweep",
+           "convergence", "mixing_kernel", "roofline_table")
 
 # payload-byte fields pinned by --check-baseline: deterministic models /
 # measurements (never wall times), so any increase is a real regression
@@ -181,6 +183,9 @@ def main(argv=None) -> int:
                 rounds=3 if args.fast else 6)
             results[name] += dropout_sweep.run_quant(
                 rates=(0.0,) if args.fast else (0.0, 0.2),
+                rounds=3 if args.fast else 6)
+        elif name == "adaptive_sweep":
+            results[name] = dropout_sweep.run_adaptive(
                 rounds=3 if args.fast else 6)
         elif name == "staleness_sweep":
             results[name] = dropout_sweep.run_staleness(

@@ -37,6 +37,7 @@ __all__ = [
     "connectivity_factor",
     "psi_total",
     "exact_phi_ell",
+    "exact_phi_ell_sparse",
 ]
 
 
@@ -171,3 +172,102 @@ def psi_total(m: int, n: int, psis: Sequence[float],
 def exact_phi_ell(W: np.ndarray) -> float:
     """Oracle phi_ell from the true topology (testing / oracle baselines)."""
     return _phi_ell_exact(equal_neighbor_matrix(W))
+
+
+# ----------------------------------------------------------------------------
+# CSR realized-phi: the oracle without densifying anything.
+# ----------------------------------------------------------------------------
+
+def _phi_from_edges(dst: np.ndarray, src: np.ndarray, w: np.ndarray,
+                    s: int, iters: int, tol: float) -> float:
+    """``sigma_1^2 + sigma_2^2 - 1`` of the s x s matrix with entries
+    ``A[dst_k, src_k] = w_k``, by blocked subspace iteration on
+    ``A^T A`` over the edge list -- O(nnz) per sweep, no (s, s) array.
+
+    The start block is deterministic (orthonormalized cosine ramps), so
+    repeated calls are bit-stable; f64 rounding inside the sweeps breaks
+    any exact orthogonality to the leading invariant subspace, which
+    subspace iteration then amplifies.  Degenerate sigma_2 == sigma_3
+    does not stall the estimate: any vector of the degenerate subspace
+    carries the same Rayleigh quotient, and only the top-two eigenvalue
+    *sum* is returned.
+    """
+    if s == 1:
+        a = float(w.sum())           # at most the single self-entry
+        return a * a - 1.0
+    q = min(4, s)
+    i = np.arange(s, dtype=np.float64)
+    V = np.stack([np.cos(np.pi * k * (i + 0.5) / s) for k in range(q)],
+                 axis=1)
+    V += 1e-8 * np.cos(np.outer(i + 1.0, np.arange(1, q + 1)))
+    V, _ = np.linalg.qr(V)
+    wc = w[:, None]
+    top2 = np.zeros(2)
+    for _ in range(iters):
+        AV = np.zeros((s, q))
+        np.add.at(AV, dst, wc * V[src])          # A @ V
+        Z = np.zeros((s, q))
+        np.add.at(Z, src, wc * AV[dst])          # A^T (A V)
+        B = V.T @ Z                              # projected A^T A
+        ev = np.sort(np.linalg.eigvalsh((B + B.T) * 0.5))[::-1]
+        new_top2 = ev[:2]
+        V, _ = np.linalg.qr(Z)
+        if np.all(np.abs(new_top2 - top2)
+                  <= tol * np.maximum(1.0, np.abs(new_top2))):
+            top2 = new_top2
+            break
+        top2 = new_top2
+    return float(top2[0] + top2[1] - 1.0)
+
+
+def exact_phi_ell_sparse(g, vertices: np.ndarray = None, *,
+                         iters: int = 500, tol: float = 1e-13) -> float:
+    """Oracle phi_ell straight off CSR edge lists.
+
+    ``g`` is either a ``repro.core.graphs.SparseClusterGraph`` (one
+    cluster's digraph; the equal-neighbor weights ``1/d_out`` are formed
+    in f64 exactly like the dense path) or a ``repro.core.sparse.SparseA``
+    (an already-built mixing matrix, optionally restricted to the cluster
+    block ``vertices`` -- the matrix must be block-diagonal there, i.e.
+    no entry may couple the block to the rest).  Equals
+    ``exact_phi_ell(W)`` to iteration tolerance (pinned by parity tests)
+    without ever materializing an (s, s) or (n, n) array, which is what
+    lets the online controller observe realized connectivity on large-n
+    sparse plans.
+    """
+    from .graphs import SparseClusterGraph
+    from .sparse import SparseA
+
+    if isinstance(g, SparseClusterGraph):
+        if vertices is not None:
+            raise ValueError(
+                "vertices= only applies to SparseA input; a "
+                "SparseClusterGraph is already one cluster block")
+        d_out = np.asarray(g.d_out, np.int64)
+        if (d_out <= 0).any():
+            raise ValueError("every node needs positive out-degree "
+                             "(Fact 1)")
+        src = np.repeat(np.arange(g.size, dtype=np.int64),
+                        np.diff(g.indptr))
+        dst = g.indices.astype(np.int64)
+        w = 1.0 / d_out[src].astype(np.float64)
+        return _phi_from_edges(dst, src, w, int(g.size), iters, tol)
+    if not isinstance(g, SparseA):
+        raise TypeError(
+            "exact_phi_ell_sparse takes a SparseClusterGraph or SparseA, "
+            f"got {type(g).__name__}")
+    dst = g.row_ids().astype(np.int64)
+    src = g.indices.astype(np.int64)
+    w = g.data.astype(np.float64)
+    if vertices is None:
+        return _phi_from_edges(dst, src, w, int(g.n), iters, tol)
+    verts = np.asarray(vertices, np.int64)
+    lut = np.full(int(g.n), -1, np.int64)
+    lut[verts] = np.arange(len(verts))
+    keep = lut[dst] >= 0
+    if (lut[src[keep]] < 0).any() or (lut[src] >= 0)[~keep].any():
+        raise ValueError(
+            "vertices must select a decoupled block: found entries "
+            "coupling the block to the rest of the matrix")
+    return _phi_from_edges(lut[dst[keep]], lut[src[keep]], w[keep],
+                           len(verts), iters, tol)

@@ -40,11 +40,19 @@ def t1_threshold(c: TheoryConstants, phi_max: float) -> int:
 
 
 def eta_schedule(c: TheoryConstants, phi_max: float):
-    """Returns eta(t) = 4 / (T mu (t + t1))."""
+    """Returns eta(t) = 4 / (T mu (t + t1)).
+
+    ``t`` may be a scalar or an ndarray of rounds: scalar calls return a
+    python float computed by the same IEEE ops as always (bit-identical
+    to the historical scalar-only closure), array calls vectorize --
+    what ``benchmarks/convergence.py`` uses for the envelope and the
+    adaptive ``threshold`` controller for per-round eta re-derivation.
+    """
     t1 = t1_threshold(c, phi_max)
 
-    def eta(t: int) -> float:
-        return 4.0 / (c.T * c.mu * (t + t1))
+    def eta(t):
+        out = 4.0 / (c.T * c.mu * (np.asarray(t, np.float64) + t1))
+        return float(out) if out.ndim == 0 else out
 
     return eta
 

@@ -53,6 +53,7 @@ from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.metrics import CommLedger
 from repro.core.rounds import MIXING_BACKENDS, QUANT_BACKENDS, \
@@ -321,6 +322,8 @@ class LocalEngine:
         self.cfg = cfg
         self.loss_fn = loss_fn
         self.backend = resolve_backend(cfg)
+        # filled by execute_controlled: the realized RoundPlan artifact
+        self.last_realized_plan = None
 
     def execute(self, plan, params, batches, *, eval_fn=None, eval_every=1,
                 energy_ratio=0.1):
@@ -370,6 +373,78 @@ class LocalEngine:
             # record inline: only the current round's params stay live
             _append_record(plan, history, t, lambda p=params: p,
                            eval_fn, eval_every)
+        return params, history
+
+    def execute_controlled(self, loop, params, batches, *, eval_fn=None,
+                           eval_every=1, energy_ratio=0.1):
+        """Closed-loop execution: one ``repro.control.ControlLoop`` row
+        per round, realized through the same jitted round function as
+        ``execute`` with per-round device arrays carrying identical
+        values -- so replaying ``self.last_realized_plan`` (set on
+        return) through ``execute`` reproduces this run bitwise (the
+        replay's records merely lack the live ``control`` telemetry).
+
+        When the policy consumes training feedback
+        (``loop.needs_deltas``, the learned-graph path), each round's
+        client deltas are re-derived from the pre-round params and fed
+        back after the round -- one extra deltas evaluation per round,
+        the documented price of the alternating model/graph scheme.
+        """
+        cfg = self.cfg
+        if cfg.scan:
+            raise ValueError(
+                "controlled execution is inherently per-round (the "
+                "policy observes each realized topology); scan=True is "
+                "unsupported")
+        if cfg.quant is not None:
+            raise ValueError(
+                "controlled execution does not support quantized "
+                "payloads: the realized plan carries no quant spec to "
+                "replay the error-feedback residuals against")
+        sparse = self.backend in ("sparse", "sparse_aggregate")
+        if bool(getattr(loop, "_sparse")) != sparse:
+            raise ValueError(
+                f"loop sparsity ({getattr(loop, '_sparse')}) must match "
+                f"the engine backend {self.backend!r} ({sparse})")
+        K = len(batches)
+        history = History(algorithm=loop.algorithm,
+                          ledger=CommLedger(energy_ratio=energy_ratio))
+        round_fn = make_round_fn(self.loss_fn, jit=cfg.jit,
+                                 mixing_backend=self.backend,
+                                 chunk=cfg.chunk, interpret=cfg.interpret)
+        needs_deltas = loop.needs_deltas
+        for t in range(K):
+            row, telemetry = loop.next_row()
+            deltas = None
+            if needs_deltas:
+                # pre-round params: the deltas the round itself mixes
+                from repro.core.rounds import client_deltas
+                tree = client_deltas(self.loss_fn, params, batches[t],
+                                     row.eta)
+                deltas = np.concatenate(
+                    [np.asarray(leaf).reshape(loop.n, -1)
+                     for leaf in jax.tree.leaves(tree)], axis=1)
+            if sparse:
+                idx, w = row.A.ell()
+                A_arg = (jnp.asarray(idx), jnp.asarray(w))
+            else:
+                A_arg = jnp.asarray(row.A, jnp.float32)
+            params, _ = round_fn(
+                params, batches[t], A_arg,
+                jnp.asarray(row.tau, jnp.float32),
+                jnp.asarray(row.m, jnp.float32),
+                jnp.asarray(row.eta, jnp.float32))
+            rec = RoundRecord(
+                t=row.t, m=row.m_planned, m_actual=row.m_actual,
+                psi_bound=row.psi_bound, d2s=row.d2s, d2d=row.d2d,
+                eta=row.eta, control=telemetry)
+            if eval_fn is not None and (t % eval_every == 0 or t == K - 1):
+                rec.metrics = {k: float(v)
+                               for k, v in eval_fn(params).items()}
+            history.records.append(rec)
+            history.ledger.add_round(d2s=rec.d2s, d2d=rec.d2d)
+            loop.feed(rec, deltas)
+        self.last_realized_plan = loop.emit_plan()
         return params, history
 
 

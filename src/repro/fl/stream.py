@@ -355,6 +355,183 @@ class StreamEngine:
         self.last_closures = closures
         return params, history
 
+    def execute_controlled(self, loop, params, batches, *, eval_fn=None,
+                           eval_every=1, energy_ratio=0.1):
+        """Closed-loop semi-async execution: a ``repro.control``
+        ``ControlLoop`` generates each round's row online (the policy
+        observing realized connectivity AND the previous round's
+        streaming telemetry), while the fault trace drives the same
+        virtual-time closure rule as ``execute``.
+
+        The fault trajectory is materialized up front (``sample_trace``
+        is host-side and seeded), and each round's availability mask is
+        folded into the row before dispatch -- so
+        ``self.last_realized_plan`` (the emitted plan + the trace's
+        arrival column) replayed through a fault-free ``StreamEngine``
+        with the same closure policy reproduces this run's params
+        bitwise, exactly like the ``execute`` replay discipline.
+        Controllers needing delta feedback are rejected: a stale closure
+        mixes cohorts from several rounds, so "the round's (n, P) delta
+        matrix" is not well defined here.
+        """
+        from .engine import resolve_backend  # noqa: F401  (import check)
+        cfg, S = self.cfg, self.stream
+        if loop.needs_deltas:
+            raise ValueError(
+                "delta-feedback controllers (needs_deltas) are not "
+                "supported on the stream runtime: stale closures mix "
+                "cohorts from several rounds; use LocalEngine")
+        if bool(getattr(loop, "_sparse")):
+            raise ValueError(
+                "the stream runtime slices dense A_t rows; build the "
+                "ControlLoop with sparse=False")
+        K, n = len(batches), loop.n
+        trace = None
+        if S.faults is not None:
+            partition = (loop.partition
+                         if S.faults.failures == "cluster" else None)
+            trace = sample_trace(S.faults, n=n, K=K, seed=S.fault_seed,
+                                 partition=partition)
+        self.last_trace = trace
+        arrival = (np.asarray(trace.arrival, np.float64)
+                   if trace is not None else np.zeros((K, n), np.float64))
+        use_active = trace is not None and bool((trace.active != 1.0).any())
+
+        round_fn = make_round_fn(self.loss_fn, jit=cfg.jit,
+                                 mixing_backend=self.backend,
+                                 chunk=cfg.chunk, interpret=cfg.interpret)
+
+        def _deltas(p, b, eta):
+            return client_deltas(self.loss_fn, p, b, eta)
+        deltas_fn = jax.jit(_deltas) if cfg.jit else _deltas
+
+        history = History(algorithm=loop.algorithm,
+                          ledger=CommLedger(energy_ratio=energy_ratio))
+        self._spec = None
+        cohorts: Dict[int, _Cohort] = {}
+        dup_events: List[float] = []
+        closures: List[float] = []
+        # per-round device columns, grown as rows materialize (the stale
+        # path indexes them by cohort round r < t, always already built)
+        A_seq: List[Any] = []
+        tau_seq: List[Any] = []
+        eta_seq: List[Any] = []
+        active_seq: Optional[List[Any]] = [] if use_active else None
+        now = 0.0
+
+        for t in range(K):
+            row, telemetry = loop.next_row(
+                active=trace.active[t] if trace is not None else None)
+            A_seq.append(jnp.asarray(row.A, jnp.float32))
+            tau_seq.append(jnp.asarray(row.tau, jnp.float32))
+            eta_seq.append(jnp.asarray(row.eta, jnp.float32))
+            if active_seq is not None:
+                active_seq.append(jnp.asarray(row.active, jnp.float32))
+
+            # ---- dispatch round t at D_t = C_{t-1} -----------------------
+            up_row = row.tau * row.active
+            expected = {int(i) for i in np.flatnonzero(up_row > 0)}
+            lost = 0
+            pending: Dict[int, float] = {}
+            for i in expected:
+                delay = arrival[t, i]
+                if math.isfinite(delay):
+                    pending[i] = now + delay
+                    if trace is not None and trace.dup[t, i] > 0:
+                        dup_events.append(now + delay
+                                          + float(trace.dup_delay[t, i]))
+                else:
+                    lost += 1
+            cohorts[t] = _Cohort(t=t, snapshot=params, pending=pending,
+                                 expected=expected)
+
+            for r in [r for r in cohorts if t - r > S.max_staleness]:
+                lost += len(cohorts[r].pending)
+                del cohorts[r]
+
+            if S.buffer is None:
+                waits = sorted(cohorts[t].pending.values())
+            else:
+                waits = sorted(a for c in cohorts.values()
+                               for a in c.pending.values())[:S.buffer]
+            target = max(waits[-1] if waits else now, now)
+            C_t = min(target, now + S.deadline)
+            deadline_hit = target > C_t
+
+            groups: List[Tuple[int, List[int], float]] = []
+            late = stale_sum = stale_max = 0
+            for r in sorted(cohorts):
+                c = cohorts[r]
+                idx = sorted(i for i, a in c.pending.items() if a <= C_t)
+                if not idx:
+                    continue
+                s = t - r
+                w = staleness_weight(s, S.staleness, S.staleness_param)
+                groups.append((r, idx, w))
+                for i in idx:
+                    del c.pending[i]
+                if s > 0:
+                    late += len(idx)
+                    stale_sum += s * len(idx)
+                    stale_max = max(stale_max, s)
+            accepted = sum(len(idx) for _, idx, _ in groups)
+            W = sum(w * len(idx) for _, idx, w in groups)
+            dup_n = sum(1 for a in dup_events if a <= C_t)
+            dup_events = [a for a in dup_events if a > C_t]
+
+            if accepted == 0:
+                pass
+            elif self._is_sync_closure(groups, cohorts, t):
+                args = (params, batches[t], A_seq[t], tau_seq[t],
+                        jnp.asarray(row.m, jnp.float32), eta_seq[t])
+                if active_seq is not None:
+                    args = args + (active_seq[t],)
+                params, _ = round_fn(*args)
+            else:
+                params = self._aggregate_groups(
+                    params, groups, cohorts, batches, deltas_fn,
+                    A_seq, tau_seq, eta_seq, active_seq, W, n)
+
+            for r in [r for r, c in cohorts.items() if not c.pending]:
+                del cohorts[r]
+
+            rec = RoundRecord(
+                t=row.t, m=row.m_planned, m_actual=accepted,
+                psi_bound=row.psi_bound, d2s=accepted + dup_n,
+                d2d=row.d2d, eta=row.eta, control=telemetry)
+            if eval_fn is not None and (t % eval_every == 0 or t == K - 1):
+                rec.metrics = {k: float(v)
+                               for k, v in eval_fn(params).items()}
+            info: Dict[str, float] = {}
+            if deadline_hit:
+                info["deadline_hit"] = 1.0
+            if late:
+                info["late"] = float(late)
+                info["stale_max"] = float(stale_max)
+                info["stale_mean"] = stale_sum / late
+            if lost:
+                info["lost"] = float(lost)
+            if dup_n:
+                info["dup"] = float(dup_n)
+            if accepted and W != accepted:
+                info["m_weighted"] = float(W)
+            if accepted < row.m_actual:
+                info["shortfall"] = float(row.m_actual - accepted)
+            if info:
+                rec.stream = info
+            history.records.append(rec)
+            history.ledger.add_round(d2s=rec.d2s, d2d=rec.d2d)
+            closures.append(C_t)
+            now = C_t
+            loop.feed(rec)
+
+        realized = loop.emit_plan()
+        if trace is not None:
+            realized = realized.with_arrivals(trace.arrival)
+        self.last_realized_plan = realized
+        self.last_closures = closures
+        return params, history
+
     # -- internals ----------------------------------------------------------
 
     @staticmethod

@@ -93,6 +93,13 @@ def main(argv=None) -> int:
                          f"(families: {', '.join(topology.families())}); "
                          "default: the paper's k_regular model from "
                          "--k-min/--k-max/--p")
+    ap.add_argument("--controller", default="",
+                    help="close the loop: adaptive per-round control "
+                         "'family:key=val,...' (families: static, "
+                         "threshold, similarity -- see repro.control). "
+                         "The realized plan lands in --plan-out like "
+                         "any other run.  Mutually exclusive with "
+                         "--plan/--dropout; semidec only")
     ap.add_argument("--dropout", type=float, default=0.0,
                     help="per-round client straggler probability "
                          "(adds an active_t column to the plan)")
@@ -170,6 +177,26 @@ def main(argv=None) -> int:
                              execution=ExecutionConfig(
                                  backend=args.backend, scan=args.scan,
                                  quant=quant))
+    if args.controller:
+        if args.plan:
+            raise SystemExit(
+                "--controller generates its own realized plan; it cannot "
+                "replay --plan (replay the realized artifact without "
+                "--controller instead)")
+        if args.dropout > 0:
+            raise SystemExit(
+                "--controller and --dropout are mutually exclusive: "
+                "straggler injection on a controlled run belongs to the "
+                "stream runtime's fault specs")
+        if args.quant:
+            raise SystemExit(
+                "--controller does not support --quant (controlled "
+                "execution has no error-feedback replay state)")
+        history = server.run(eval_fn=eval_fn, controller=args.controller)
+        if args.plan_out:
+            server.last_plan.save(args.plan_out)
+            print(f"realized trajectory saved to {args.plan_out}")
+        return _report(args, history)
     plan = RoundPlan.load(args.plan) if args.plan else None
     if args.dropout > 0:
         if plan is None:
@@ -200,7 +227,10 @@ def main(argv=None) -> int:
             out_plan = out_plan.with_quant(quant)
         out_plan.save(args.plan_out)
         print(f"trajectory saved to {args.plan_out}")
+    return _report(args, history)
 
+
+def _report(args, history) -> int:
     rows = []
     for rec in history.records:
         rows.append(dict(t=rec.t, m=rec.m_actual, d2s=rec.d2s, d2d=rec.d2d,

@@ -12,7 +12,10 @@ so a plan can be *regenerated from spec* (same seed => identical
 Registered families (see ``repro.topology.families`` for regimes):
 ``k_regular`` (the paper's Sec. 6.1.1 model; bitwise-compatible with the
 legacy ``D2DNetwork``), ``erdos_renyi``, ``geometric`` (time-correlated
-random-waypoint mobility), ``ring``, ``small_world``, ``hub``.
+random-waypoint mobility), ``ring``, ``small_world``, ``hub``,
+``preferential_attachment`` (scale-free in-degree tails), and
+``learned`` (Dada-style top-k collaboration graph driven by
+``set_similarity`` -- see ``repro.control``).
 
     spec  = topology.make_spec("geometric", n=70, c=7, radius=0.3)
     model = spec.build()
@@ -23,8 +26,8 @@ CLI syntax: ``topology.parse_spec("k_regular:k_range=6-9,p_fail=0.1",
 n=70, c=7)`` (see ``repro.launch.train --topology``).
 """
 
-from .families import (ErdosRenyi, Geometric, Hub, KRegular, Ring,
-                       SmallWorld)
+from .families import (ErdosRenyi, Geometric, Hub, KRegular, Learned,
+                       PreferentialAttachment, Ring, SmallWorld)
 # imported after .families so the registry *function* ``families`` wins
 # over the submodule attribute of the same name
 from .base import (MEMBERSHIPS, ClusteredTopology, TopologyModel,
@@ -37,4 +40,5 @@ __all__ = [
     "build", "families", "family_defaults", "from_json", "make_partition",
     "make_spec", "parse_spec", "register",
     "KRegular", "ErdosRenyi", "Geometric", "Ring", "SmallWorld", "Hub",
+    "PreferentialAttachment", "Learned",
 ]

@@ -21,6 +21,17 @@ Sec. 5 bound machinery:
                  ring -> random as beta goes 0 -> 1
     hub          star-like: spokes touch only the hub(s); d_in(hub) ~ s
                  (varphi ~ s/2), the D2S-degenerate extreme
+    preferential_attachment
+                 Barabasi-Albert-style directed growth: newcomers attach
+                 ``m_edges`` out-edges with probability proportional to
+                 in-degree + 1 -> scale-free in-degree tail (early nodes
+                 accumulate most links), heavy-tail stress for varphi
+    learned      Dada-style collaboration graph (Zantedeschi et al.,
+                 AISTATS 2020): each client keeps out-edges to its top-k
+                 most-similar peers under an externally-pushed
+                 similarity matrix (``set_similarity``, fed by the
+                 ``similarity`` controller from inter-client delta
+                 cosines); a deterministic ring before the first push
 """
 
 from __future__ import annotations
@@ -35,7 +46,7 @@ from repro.core.graphs import (SparseClusterGraph, delete_edge_fraction,
 from .base import ClusteredTopology, register
 
 __all__ = ["KRegular", "ErdosRenyi", "Geometric", "Ring", "SmallWorld",
-           "Hub"]
+           "Hub", "PreferentialAttachment", "Learned"]
 
 
 @register("k_regular")
@@ -251,3 +262,120 @@ class Hub(ClusteredTopology):
         return SparseClusterGraph(vertices=np.asarray(verts),
                                   indptr=indptr,
                                   indices=np.concatenate(rows))
+
+
+@register("preferential_attachment")
+class PreferentialAttachment(ClusteredTopology):
+    """Directed Barabasi-Albert-style growth per cluster: the first
+    ``seed_clique`` nodes form a clique, then each newcomer ``i``
+    attaches ``m_edges`` out-edges to distinct earlier nodes drawn with
+    probability proportional to ``in-degree + 1``.  Rich-get-richer:
+    in-degrees develop a scale-free tail (early nodes hoard links) while
+    out-degrees stay ~``m_edges`` -- the heavy-tailed ``d_max_in`` /
+    ``varphi`` regime between the balanced k-regular model and the
+    degenerate hub extreme."""
+
+    DEFAULTS: Dict = {"m_edges": 2, "seed_clique": 3, "self_loops": True}
+
+    def _cluster_sparse(self, rng, t, verts):
+        # Native CSR growth -- edge lists only, no (s, s) scratch.
+        # _cluster_W derives from this (the reverse of the default), so
+        # dense and sparse snapshots share one rng stream trivially.
+        p = self._params
+        s = len(verts)
+        if s == 1:
+            return SparseClusterGraph(
+                vertices=np.asarray(verts),
+                indptr=np.array([0, 1], dtype=np.int64),
+                indices=np.zeros(1, dtype=np.int32))
+        self_loops = bool(p["self_loops"])
+        c0 = max(2, min(int(p["seed_clique"]), s))
+        m_edges = max(1, int(p["m_edges"]))
+        d_in = np.zeros(s, dtype=np.int64)
+        rows = []
+        for i in range(c0):
+            cols = np.arange(c0, dtype=np.int64)
+            if not self_loops:
+                cols = np.delete(cols, i)
+            rows.append(cols)
+        d_in[:c0] = c0 if self_loops else c0 - 1
+        for i in range(c0, s):
+            k = min(m_edges, i)
+            wts = d_in[:i] + 1.0
+            targets = np.sort(rng.choice(i, size=k, replace=False,
+                                         p=wts / wts.sum()).astype(np.int64))
+            d_in[targets] += 1
+            if self_loops:
+                targets = np.append(targets, i)   # i > targets: stays sorted
+                d_in[i] += 1
+            rows.append(targets)
+        indptr = np.zeros(s + 1, dtype=np.int64)
+        np.cumsum([r.size for r in rows], out=indptr[1:])
+        return SparseClusterGraph(vertices=np.asarray(verts),
+                                  indptr=indptr,
+                                  indices=np.concatenate(rows)
+                                  .astype(np.int32))
+
+    def _cluster_W(self, rng, t, verts):
+        return self._cluster_sparse(rng, t, verts).W
+
+
+@register("learned")
+class Learned(ClusteredTopology):
+    """Learned collaboration graph (Dada-style; Zantedeschi et al.,
+    AISTATS 2020): every client keeps out-edges to its ``k``
+    most-similar peers inside its cluster, under an externally-pushed
+    (n, n) similarity matrix -- ``set_similarity(S)``, which the
+    ``similarity`` controller feeds from EMA cosine similarity of client
+    deltas, alternating model steps and graph steps.  Before the first
+    push (and again after the ``t = 0`` trajectory reset) the graph is a
+    deterministic ``k``-hop ring, so the family also works standalone.
+
+    Consumes NO rng: given the pushed similarity sequence the trajectory
+    is fully determined (ties break by stable argsort on column index),
+    which is what keeps controller-emitted realized plans replayable.
+    ``time_correlated`` marks the external state: sampling requires
+    consecutive ``t`` and a fresh model knows no similarity, so adaptive
+    plans are replayable artifacts but not regenerable from spec alone.
+    """
+
+    DEFAULTS: Dict = {"k": 3, "self_loops": True}
+    time_correlated = True
+
+    def __init__(self, spec):
+        super().__init__(spec)
+        self._S = None
+
+    def _reset(self, rng):
+        self._S = None
+
+    def set_similarity(self, S: np.ndarray) -> None:
+        """Push a fresh (n, n) inter-client similarity matrix; the next
+        snapshot rebuilds every cluster's top-k out-edges from it."""
+        S = np.asarray(S, np.float64)
+        if S.shape != (self.n, self.n):
+            raise ValueError(
+                f"similarity must be ({self.n}, {self.n}), got {S.shape}")
+        self._S = S
+
+    def _cluster_W(self, rng, t, verts):
+        p = self._params
+        s = len(verts)
+        self_loops = bool(p["self_loops"])
+        W = np.zeros((s, s), dtype=np.int8)
+        if s == 1:
+            W[0, 0] = 1
+            return W
+        k = min(max(1, int(p["k"])), s - 1)
+        if self._S is None:
+            idx = np.arange(s)
+            for h in range(1, k + 1):
+                W[idx, (idx + h) % s] = 1
+        else:
+            S = np.array(self._S[np.ix_(verts, verts)], np.float64)
+            np.fill_diagonal(S, -np.inf)     # top-k over *peers*
+            top = np.argsort(-S, axis=1, kind="stable")[:, :k]
+            np.put_along_axis(W, top, np.int8(1), axis=1)
+        if self_loops:
+            np.fill_diagonal(W, 1)
+        return ensure_positive_out_degree(W, self_loops=self_loops)

@@ -1,0 +1,460 @@
+"""repro.control: online connectivity controllers (ISSUE 9 tentpole).
+
+Covers: spec construction / JSON + CLI round-trips / registry
+validation, Decision invariants, the ``static`` bitwise pin (a
+controlled run reproduces the precomputed ``connectivity_aware`` plan
+on every mixing backend), replayability of adaptive runs from their
+emitted realized ``RoundPlan`` (and regenerability for policies that
+leave the graph untouched), the closed-loop threshold decision rule
+(eq. 7 on realized phi), gossip powering / relay-scheme masking, the
+learned-graph ``similarity`` path, StreamEngine closed-loop execution,
+and the satellite numerics: CSR-native ``exact_phi_ell_sparse`` parity
+and ndarray-vectorized ``eta_schedule`` / ``gap_bound``.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import control, topology
+from repro.control import ControlLoop, ControllerSpec, Decision, \
+    RealizedRound
+from repro.core import D2DNetwork, FederatedServer, ServerConfig
+from repro.core.bounds import exact_phi_ell, exact_phi_ell_sparse, \
+    psi_total
+from repro.core.sampling import min_clients
+from repro.core.theory import TheoryConstants, eta_schedule, gap_bound
+from repro.fl import ExecutionConfig, RoundPlan, StreamConfig, \
+    parse_fault_spec
+
+jax.config.update("jax_enable_x64", False)
+
+
+def quad_loss(params, batch):
+    x = params["x"]
+    b, = batch
+    return 0.5 * jnp.sum((x - b.mean(axis=0)) ** 2)
+
+
+def _net_cfg(n=12, c=2, t_max=4, seed=3, phi_max=0.3, **kw):
+    net = D2DNetwork(n=n, c=c, k_range=(4, 6), p_fail=0.1)
+    cfg = ServerConfig(T=3, t_max=t_max, phi_max=phi_max, seed=seed,
+                       eta=lambda t: 0.2 / (1 + 0.3 * t), **kw)
+    return net, cfg
+
+
+def _sampler(n, p, T=3, B=2):
+    targets = np.random.default_rng(11).standard_normal((n, p)) \
+        .astype(np.float32)
+
+    def sampler(r, t):
+        samp = targets[:, None, None, :] \
+            + 0.05 * r.standard_normal((n, T, B, p))
+        return (jnp.asarray(samp, jnp.float32),)
+
+    return sampler
+
+
+def _server(net, cfg, p=4, **kw):
+    return FederatedServer(net, quad_loss, {"x": jnp.zeros(p)},
+                           _sampler(net.n, p), cfg,
+                           algorithm="semidec", **kw)
+
+
+def _rec_tuple(rec):
+    """RoundRecord identity minus the live-only ``control``/``stream``
+    telemetry (None on replays by design)."""
+    return (rec.t, rec.m, rec.m_actual, rec.psi_bound, rec.d2s, rec.d2d,
+            rec.eta, rec.metrics)
+
+
+def _assert_same_run(hist_a, hist_b, params_a, params_b):
+    np.testing.assert_array_equal(np.asarray(params_a["x"]),
+                                  np.asarray(params_b["x"]))
+    assert len(hist_a.records) == len(hist_b.records)
+    for a, b in zip(hist_a.records, hist_b.records):
+        assert _rec_tuple(a) == _rec_tuple(b)
+
+
+# ---------------------------------------------------------------------------
+# specs, registry, Decision invariants
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_the_three_policies():
+    fams = control.controllers()
+    for fam in ("static", "threshold", "similarity"):
+        assert fam in fams
+
+
+def test_make_spec_fills_defaults_and_validates():
+    spec = control.make_spec("threshold", phi_max=0.25)
+    assert spec.params["phi_max"] == 0.25
+    # defaults are materialized so the spec serializes complete
+    assert spec.params["tau"] == control.controller_defaults(
+        "threshold")["tau"]
+    with pytest.raises(ValueError, match="unknown parameter"):
+        control.make_spec("threshold", nope=1)
+    with pytest.raises(ValueError, match="unknown controller family"):
+        control.make_spec("no_such_policy")
+
+
+def test_spec_json_and_cli_roundtrip():
+    spec = control.make_spec("similarity", ema=0.7, graph_every=2)
+    again = ControllerSpec.from_dict(spec.as_dict())
+    assert again == spec and hash(again) == hash(spec)
+    built = control.from_json(spec.to_json())
+    assert built.spec == spec
+    parsed = control.parse_spec("similarity:ema=0.7,graph_every=2")
+    assert parsed == spec
+    with pytest.raises(ValueError, match="malformed controller option"):
+        control.parse_spec("threshold:phi_max")
+
+
+def test_decision_invariants():
+    Decision(m=1)                                     # minimal is fine
+    with pytest.raises(ValueError, match="m must be >= 1"):
+        Decision(m=0)
+    with pytest.raises(ValueError, match="tau must be >= 1"):
+        Decision(m=3, tau=0)
+    with pytest.raises(ValueError, match="scheme"):
+        Decision(m=3, scheme="broadcast")
+    with pytest.raises(ValueError, match="eta"):
+        Decision(m=3, eta=0.0)
+
+
+def test_unknown_spec_params_rejected_at_build():
+    with pytest.raises(ValueError, match="unknown parameter"):
+        control.build(ControllerSpec("static", {"oops": 1}))
+
+
+# ---------------------------------------------------------------------------
+# the static pin: controlled run == precomputed plan, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("execution", [
+    ExecutionConfig(backend="einsum"),
+    ExecutionConfig(backend="fused", record_mixed=True),
+    ExecutionConfig(backend="aggregate"),
+    ExecutionConfig(backend="sparse"),
+], ids=["einsum", "fused", "aggregate", "sparse"])
+def test_static_controller_matches_precomputed_plan(execution):
+    net, cfg = _net_cfg()
+    s_plan = _server(net, cfg, execution=execution)
+    sparse = s_plan.effective_backend in ("sparse", "sparse_aggregate")
+    plan = RoundPlan.connectivity_aware(net, cfg, sparse=sparse)
+    h_plan = s_plan.run(eval_fn=lambda prm: {
+        "gap": float(jnp.sum(prm["x"] ** 2))}, plan=plan)
+
+    s_ctl = _server(net, cfg, execution=execution)
+    h_ctl = s_ctl.run(eval_fn=lambda prm: {
+        "gap": float(jnp.sum(prm["x"] ** 2))}, controller="static")
+    _assert_same_run(h_plan, h_ctl, s_plan.params, s_ctl.params)
+    # static never asks for realized phi: zero per-round control cost
+    assert all(rec.control is None for rec in h_ctl.records)
+
+
+def test_static_realized_plan_regenerates_from_spec():
+    spec = topology.make_spec("k_regular", n=12, c=2, k_range=(4, 6),
+                              p_fail=0.1)
+    net = spec.build()
+    _, cfg = _net_cfg()
+    plan = RoundPlan.controlled(net, cfg, "static")
+    assert plan.seed is not None
+    again = plan.regenerate()
+    for t in range(plan.n_rounds):
+        np.testing.assert_array_equal(np.asarray(plan[t].A),
+                                      np.asarray(again[t].A))
+        np.testing.assert_array_equal(plan[t].tau, again[t].tau)
+
+
+# ---------------------------------------------------------------------------
+# adaptive runs: replay bitwise from the emitted realized plan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("controller", [
+    "threshold",
+    "threshold:phi_max=0.15,mu=0.1,beta=4.0",   # with eta re-derivation
+    "threshold:tau=2",                          # gossip powering
+    "threshold:scheme=sampled",                 # relay masking
+])
+def test_adaptive_run_replays_bitwise(controller):
+    net, cfg = _net_cfg()
+    s_live = _server(net, cfg)
+    h_live = s_live.run(eval_fn=lambda prm: {
+        "gap": float(jnp.sum(prm["x"] ** 2))}, controller=controller)
+    realized = s_live.last_plan
+    assert realized.n_rounds == cfg.t_max
+
+    s_replay = _server(net, cfg)
+    h_replay = s_replay.run(eval_fn=lambda prm: {
+        "gap": float(jnp.sum(prm["x"] ** 2))}, plan=realized)
+    _assert_same_run(h_live, h_replay, s_live.params, s_replay.params)
+    # live rounds carry realized-connectivity telemetry, replays don't
+    assert all(rec.control is not None for rec in h_live.records)
+    assert all(rec.control is None for rec in h_replay.records)
+
+
+def test_threshold_plan_regenerable_but_gossip_not():
+    net, cfg = _net_cfg()
+    # pure-m policies keep (topology, seed) provenance...
+    plan = RoundPlan.controlled(net, cfg, "threshold")
+    assert plan.seed is not None
+    # ...graph-altering ones are replay-only artifacts
+    for ctl in ("threshold:tau=2", "threshold:scheme=sampled"):
+        assert RoundPlan.controlled(net, cfg, ctl).seed is None
+
+
+def test_offline_planning_rejects_delta_feedback():
+    spec = topology.make_spec("learned", n=12, c=2)
+    net = spec.build()
+    _, cfg = _net_cfg()
+    with pytest.raises(ValueError, match="cannot plan offline"):
+        RoundPlan.controlled(net, cfg, "similarity")
+
+
+# ---------------------------------------------------------------------------
+# the closed-loop decision rule
+# ---------------------------------------------------------------------------
+
+def _realized(phis, sizes, n, phi_max, t=1):
+    return RealizedRound(t=t, n=n, sizes=tuple(sizes),
+                         psis=tuple(phis), phis=tuple(phis),
+                         m_rule=n, phi_max=phi_max)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_threshold_decision_is_the_eq7_rule_on_realized_phi(seed):
+    rng = np.random.default_rng(seed)
+    net, cfg = _net_cfg()
+    n = net.n
+    sizes = (6, 6)
+    phis = tuple(float(p) for p in rng.uniform(0.01, 1.5, size=2))
+    for phi_max in (0.05, 0.2, 0.5, 2.0):
+        ctl = control.make_spec("threshold", phi_max=phi_max).build()
+        ctl.reset(net, cfg)
+        dec = ctl.observe(None, _realized(phis, sizes, n, phi_max))
+        m_star = min_clients(phis, sizes, n, phi_max)
+        assert dec.m == m_star
+        # the decided m satisfies the eq.-6 guarantee whenever feasible
+        if m_star < n:
+            assert psi_total(dec.m, n, phis, sizes) <= phi_max + 1e-12
+        if dec.m > 1:
+            assert psi_total(dec.m - 1, n, phis, sizes) > phi_max
+
+
+def test_threshold_inherits_config_phi_max_by_default():
+    net, cfg = _net_cfg(phi_max=0.12)
+    ctl = control.make_spec("threshold").build()
+    ctl.reset(net, cfg)
+    assert ctl._phi_max == pytest.approx(0.12)
+
+
+def test_threshold_saves_uploads_when_bounds_are_loose():
+    """On a hub topology the degree-stat bound overestimates phi, so the
+    realized-phi rule admits a strictly smaller total m than the
+    open-loop plan (the adaptive_sweep win case)."""
+    spec = topology.make_spec("hub", n=24, c=3)
+    _, cfg = _net_cfg(t_max=6)
+    d2s = {}
+    for ctl in ("static", "threshold"):
+        plan = RoundPlan.controlled(spec.build(), cfg, ctl)
+        d2s[ctl] = sum(plan[t].d2s for t in range(plan.n_rounds))
+    assert d2s["threshold"] < d2s["static"], d2s
+
+
+def test_gossip_and_relay_scheme_realization():
+    net, cfg = _net_cfg()
+    loop = ControlLoop(net, cfg, "threshold:tau=2,scheme=sampled")
+    base = ControlLoop(net, cfg, "threshold")
+    row, _ = loop.next_row()
+    row0, _ = base.next_row()
+    A, A0 = np.asarray(row.A, np.float64), np.asarray(row0.A, np.float64)
+    # column-stochasticity survives masking + powering
+    np.testing.assert_allclose(A.sum(axis=0), 1.0, atol=1e-6)
+    # unsampled clients relay nothing: their column is e_j
+    for j in np.flatnonzero(np.asarray(row.tau) == 0.0):
+        col = np.zeros(net.n)
+        col[j] = 1.0
+        np.testing.assert_allclose(A[:, j], col, atol=1e-7)
+    # two gossip iterations retransmit the masked edge set twice
+    assert row.d2d % 2 == 0
+    assert not np.array_equal(A, A0)
+
+
+def test_similarity_controller_requires_learned_topology():
+    net, cfg = _net_cfg()          # plain D2DNetwork: no set_similarity
+    with pytest.raises(ValueError, match="set_similarity"):
+        ControlLoop(net, cfg, "similarity")
+
+
+def test_similarity_run_replays_bitwise_and_is_not_regenerable():
+    spec = topology.make_spec("learned", n=12, c=2, k=3)
+    net = spec.build()
+    _, cfg = _net_cfg()
+    s_live = _server(net, cfg)
+    h_live = s_live.run(controller="similarity:ema=0.5,graph_every=1")
+    realized = s_live.last_plan
+    assert realized.seed is None   # graph depends on training data
+
+    s_replay = _server(spec.build(), cfg)
+    h_replay = s_replay.run(plan=realized)
+    _assert_same_run(h_live, h_replay, s_live.params, s_replay.params)
+    # the learned graph actually moved: later rounds differ from round 0
+    assert not np.array_equal(np.asarray(realized[0].A),
+                              np.asarray(realized[-1].A))
+
+
+# ---------------------------------------------------------------------------
+# server plumbing
+# ---------------------------------------------------------------------------
+
+def test_server_rejects_plan_plus_controller():
+    net, cfg = _net_cfg()
+    plan = RoundPlan.connectivity_aware(net, cfg)
+    with pytest.raises(ValueError, match="not both"):
+        _server(net, cfg).run(plan=plan, controller="static")
+
+
+def test_server_rejects_controller_for_fedavg():
+    net, cfg = _net_cfg(m_fixed=6)
+    server = FederatedServer(net, quad_loss, {"x": jnp.zeros(4)},
+                             _sampler(net.n, 4), cfg, algorithm="fedavg")
+    with pytest.raises(ValueError, match="semidec"):
+        server.run(controller="static")
+
+
+# ---------------------------------------------------------------------------
+# StreamEngine closed loop
+# ---------------------------------------------------------------------------
+
+def _stream_server(net, cfg, stream, p=4):
+    return _server(net, cfg, execution=ExecutionConfig(
+        backend="aggregate", stream=stream), p=p)
+
+
+def test_stream_controlled_no_faults_matches_local():
+    net, cfg = _net_cfg()
+    s_local = _server(net, cfg,
+                      execution=ExecutionConfig(backend="aggregate"))
+    h_local = s_local.run(controller="threshold")
+    s_stream = _stream_server(net, cfg, StreamConfig())
+    h_stream = s_stream.run(controller="threshold")
+    np.testing.assert_array_equal(np.asarray(s_local.params["x"]),
+                                  np.asarray(s_stream.params["x"]))
+    for a, b in zip(h_local.records, h_stream.records):
+        assert _rec_tuple(a) == _rec_tuple(b)
+        assert a.control == b.control     # telemetry survives streaming
+
+
+def test_stream_controlled_fault_run_replays_bitwise():
+    net, cfg = _net_cfg(t_max=5)
+    stream = StreamConfig(
+        deadline=1.0, staleness="poly",
+        faults=parse_fault_spec("iid:rate=0.2,latency=exponential,"
+                                "mean=0.4"),
+        fault_seed=7)
+    s_live = _stream_server(net, cfg, stream)
+    h_live = s_live.run(controller="threshold")
+    realized = s_live.last_realized_plan \
+        if hasattr(s_live, "last_realized_plan") else s_live.last_plan
+    # straggler masks were folded in: some rounds lost uploads
+    assert any(rec.m_actual < net.n for rec in h_live.records)
+
+    # replay through a fault-free stream engine with the same closure
+    # policy reproduces params and comm accounting bitwise
+    s_replay = _stream_server(
+        net, cfg, StreamConfig(deadline=1.0, staleness="poly"))
+    h_replay = s_replay.run(plan=realized)
+    np.testing.assert_array_equal(np.asarray(s_live.params["x"]),
+                                  np.asarray(s_replay.params["x"]))
+    for a, b in zip(h_live.records, h_replay.records):
+        assert (a.t, a.m, a.m_actual, a.d2s, a.d2d, a.eta) == \
+            (b.t, b.m, b.m_actual, b.d2s, b.d2d, b.eta)
+
+
+def test_stream_controlled_rejects_delta_feedback():
+    spec = topology.make_spec("learned", n=12, c=2)
+    net = spec.build()
+    _, cfg = _net_cfg()
+    with pytest.raises(ValueError, match="needs_deltas|stream"):
+        _stream_server(net, cfg, StreamConfig()).run(
+            controller="similarity")
+
+
+# ---------------------------------------------------------------------------
+# satellites: CSR-native realized phi, vectorized theory schedules
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ["k_regular", "hub", "ring",
+                                    "preferential_attachment"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_exact_phi_ell_sparse_matches_dense(family, seed):
+    """CSR-native realized phi == the dense oracle, cluster by cluster:
+    once straight off the sampled edge lists (``sample_sparse`` consumes
+    the rng stream identically to ``sample``), once off a ``SparseA``
+    mixing matrix built from the dense equal-neighbor weights."""
+    from repro.core.adjacency import equal_neighbor_matrix
+    from repro.core.sparse import SparseA
+
+    spec = topology.make_spec(family, n=24, c=3)
+    model = spec.build()
+    dense_clusters = model.sample(np.random.default_rng(seed), 0)
+    for cg in dense_clusters:
+        dense = exact_phi_ell(cg.W)
+        W_mix = np.asarray(equal_neighbor_matrix(cg.W), np.float64)
+        dst, src = np.nonzero(W_mix)
+        spa = SparseA.from_edges(len(cg.W), dst, src, W_mix[dst, src])
+        # subspace iteration converges to ~1e-7 of the dense SVD on
+        # near-degenerate sigma_2 spectra (k-regular); 1e-6 still pins
+        # the value far below any bound slack the controller acts on
+        assert exact_phi_ell_sparse(spa) == pytest.approx(
+            dense, abs=1e-6), family
+    sparse_clusters = spec.build().sample_sparse(
+        np.random.default_rng(seed), 0)
+    for cg, sg in zip(dense_clusters, sparse_clusters):
+        assert exact_phi_ell_sparse(sg) == pytest.approx(
+            exact_phi_ell(cg.W), abs=1e-6), family
+
+
+def test_eta_schedule_and_gap_bound_vectorize():
+    consts = TheoryConstants(mu=0.1, beta=4.0, rho=1.0, delta=1.0,
+                             gamma=0.5, T=3, n=12)
+    eta = eta_schedule(consts, 0.1)
+    ts = np.arange(0, 20)
+    vec = np.asarray(eta(ts))
+    assert vec.shape == ts.shape
+    np.testing.assert_array_equal(
+        vec, np.array([eta(int(t)) for t in ts]))
+    ts1 = np.arange(1, 20)
+    env = np.asarray(gap_bound(consts, 0.1, 2.0, ts1))
+    assert env.shape == ts1.shape
+    np.testing.assert_array_equal(
+        env, np.array([gap_bound(consts, 0.1, 2.0, int(t))
+                       for t in ts1]))
+
+
+# ---------------------------------------------------------------------------
+# ControlLoop internals: fold_active parity with RoundPlan.with_active
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sparse", [False, True])
+def test_fold_active_matches_with_active(sparse):
+    net, cfg = _net_cfg()
+    rng = np.random.default_rng(5)
+    active = (rng.random((cfg.t_max, net.n)) > 0.25) \
+        .astype(np.float32)
+    loop_fold = ControlLoop(net, cfg, "static", sparse=sparse)
+    loop_flat = ControlLoop(net, cfg, "static", sparse=sparse)
+    for t in range(cfg.t_max):
+        loop_fold.next_row(active=active[t])
+        loop_flat.next_row()
+    folded = loop_fold.emit_plan()
+    masked = loop_flat.emit_plan().with_active(active)
+    for t in range(cfg.t_max):
+        a, b = folded[t], masked[t]
+        assert (a.m, a.m_actual, a.d2s, a.d2d) == \
+            (b.m, b.m_actual, b.d2s, b.d2d)
+        np.testing.assert_array_equal(a.active, b.active)

@@ -124,3 +124,20 @@ def test_families_span_distinct_degree_regimes():
         m_at[family] = min_clients(psis, [cg.size for cg in clusters],
                                    n, 0.2)
     assert m_at["ring"] > m_at["k_regular"]
+
+
+def test_preferential_attachment_heavy_tail():
+    """PA grows a scale-free in-degree tail: early nodes accumulate far
+    more in-links than anyone sends (d_max_in >> d_max_out), the regime
+    where degree-stat bounds go loose and adaptive control pays off."""
+    model = topology.make_spec("preferential_attachment", n=60,
+                               c=1).build()
+    cg = model.sample(np.random.default_rng(0), 0)[0]
+    stats = degree_stats(cg.W)
+    assert stats.d_max_in >= 5 * stats.d_max_out, stats
+    assert stats.varphi > 1.0, stats
+    # the tail is a property of the growth process, not one seed
+    for seed in (1, 2):
+        cg = model.sample(np.random.default_rng(seed), 0)[0]
+        s = degree_stats(cg.W)
+        assert s.d_max_in > s.d_max_out, s
