@@ -1,0 +1,147 @@
+"""Wall-clock ingestion throughput: overlapped vs serial dispatch.
+
+Measures what the ``repro.runtime`` overlap knob actually buys: with
+``overlap=True`` a cohort's local training runs on a worker while the
+previous rounds' stragglers drain, so per-round wall time approaches
+``max(train, straggler window)`` instead of their sum.  Each cell runs
+the same seeded exponential-latency fault process through
+``IngestEngine`` on a ``(d, d)`` linear-autoencoder problem sized so
+local training is comparable to the deadline window (tiny models hide
+the effect: the straggler wait dominates both modes).  Rounds evaluate
+a held-out loss, the sync point every monitored run has -- without one
+XLA's asynchronous dispatch pipelines the serial mode's deferred
+training through the sleeps and the comparison degenerates to a tie.
+
+Every run's ``Recording`` is verified against a virtual replay before
+its numbers are reported -- a throughput row from a run that broke the
+live/replay anchor would be meaningless.
+
+Rows land under the ``ingest_sweep`` key of ``BENCH_mixing.json``
+(``python -m benchmarks.run --only ingest_sweep``); wall times are
+machine-dependent and deliberately NOT baseline-gated (the CI gate
+pins payload bytes only).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import D2DNetwork, ServerConfig
+from repro.fl import (ExecutionConfig, RoundPlan, StreamConfig,
+                      make_engine, parse_fault_spec)
+from repro.runtime import RuntimeConfig
+
+
+def _mat_loss(params, batch):
+    # a (d, d) linear autoencoder step: local training costs real FLOPs,
+    # so the overlap effect is visible against the straggler window
+    # (with a toy loss the wait dominates both modes and r/s ties)
+    import jax.numpy as jnp
+    x = params["x"]
+    b, = batch
+    return 0.5 * jnp.mean((b @ x - b) ** 2)
+
+
+def _problem(n, K, d, T, seed=3, batch_seed=7):
+    import jax.numpy as jnp
+    net = D2DNetwork(n=n, c=3, k_range=(4, 6), p_fail=0.1)
+    cfg = ServerConfig(T=T, t_max=K, phi_max=0.3, seed=seed,
+                       eta=lambda t: 0.05)
+    plan = RoundPlan.connectivity_aware(net, cfg)
+    rng = np.random.default_rng(batch_seed)
+    batches = [
+        (jnp.asarray(rng.standard_normal((n, T, 2, d)), jnp.float32),)
+        for _ in range(K)]
+    x0 = jnp.asarray(0.01 * np.eye(d), jnp.float32)
+    return plan, {"x": x0}, batches
+
+
+def run(rounds: int = 8, n: int = 24, d: int = 768, T: int = 5,
+        time_scale: float = 0.15, deadline: float = 4.0,
+        latency_mean: float = 6.0, buffer: int = 12,
+        max_staleness: int = 6, seed: int = 5, quiet: bool = False):
+    """One row per overlap mode: rounds/sec + staleness distribution
+    under the same seeded exponential-latency process.
+
+    The regime is straggler-heavy by construction (latency mean above
+    the deadline, generous ``max_staleness``): closures then consume
+    several stale cohorts at once, and the serial mode pays one local
+    training per consumed group inside the aggregate while the
+    overlapped mode finds every payload already computed.  ``time_scale``
+    must keep the training cost small in *virtual* units (train wall
+    seconds / time_scale well under the deadline) or the payload-ready
+    shift pushes every upload past its own round's window."""
+    plan, params0, batches = _problem(n, rounds, d, T)
+    stream = StreamConfig(
+        buffer=buffer, deadline=deadline, staleness="poly",
+        max_staleness=max_staleness,
+        faults=parse_fault_spec(
+            f"markov:p_fail=0.2,latency=exponential,mean={latency_mean}"),
+        fault_seed=seed)
+
+    import jax
+    import jax.numpy as jnp
+    eval_batch = batches[0][0][0]
+
+    @jax.jit
+    def _eval(params):
+        return {"loss": _mat_loss(params, (eval_batch,))}
+
+    def eval_fn(params):
+        # per-round metrics, like any monitored ingestion run; the
+        # float() materialization is the round's sync point -- without
+        # one, XLA's async dispatch queue pipelines the serial mode's
+        # deferred training through the straggler sleeps for free and
+        # both modes tie
+        return {k: float(v) for k, v in _eval(params).items()}
+
+    rows = []
+    if not quiet:
+        print(f"{'overlap':>8} {'rounds':>6} {'wall_s':>7} {'r/s':>6} "
+              f"{'late':>5} {'lost':>5} {'stale_mean':>10} {'anchor':>7}")
+    for overlap in (False, True):
+        e = make_engine(
+            ExecutionConfig(stream=stream, runtime=RuntimeConfig(
+                clock="wall", time_scale=time_scale, overlap=overlap)),
+            _mat_loss)
+        _, hist = e.execute(plan, params0, batches, eval_fn=eval_fn)
+        rec = e.last_recording
+        wall = float(rec.meta["wall_seconds"])
+        done = len(hist.records)
+        late = lost = 0
+        stale_weighted = 0.0
+        stale_max = 0.0
+        for r in hist.records:
+            s = r.stream or {}
+            late += int(s.get("late", 0))
+            lost += int(s.get("lost", 0))
+            stale_weighted += s.get("stale_mean", 0.0) * s.get("late", 0)
+            stale_max = max(stale_max, s.get("stale_max", 0.0))
+        problems = rec.verify(_mat_loss, params0, batches)
+        row = dict(
+            kind="ingest_throughput", overlap=overlap, rounds=done,
+            n=n, d=d, time_scale=time_scale, deadline=deadline,
+            latency_mean=latency_mean, wall_seconds=round(wall, 4),
+            rounds_per_sec=round(done / wall, 3) if wall > 0 else None,
+            late=late, lost=lost,
+            stale_mean=round(stale_weighted / late, 3) if late else 0.0,
+            stale_max=stale_max,
+            replay_ok=not problems)
+        rows.append(row)
+        if not quiet:
+            print(f"{str(overlap):>8} {done:>6} {wall:>7.2f} "
+                  f"{row['rounds_per_sec']:>6.2f} {late:>5} {lost:>5} "
+                  f"{row['stale_mean']:>10.3f} "
+                  f"{'OK' if row['replay_ok'] else 'FAIL':>7}")
+    by = {r["overlap"]: r for r in rows}
+    speedup = (by[True]["rounds_per_sec"] / by[False]["rounds_per_sec"]
+               if by[False]["rounds_per_sec"] else None)
+    if not quiet and speedup:
+        print(f"overlap speedup: x{speedup:.2f}")
+    rows.append(dict(kind="ingest_speedup",
+                     speedup=round(speedup, 3) if speedup else None))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -8,6 +8,8 @@
                      plan: D2S spend to a target accuracy
   staleness_sweep -- semi-async StreamEngine: buffer size x upload
                      latency distribution (late/lost/staleness totals)
+  ingest_sweep    -- wall-clock IngestEngine: overlapped vs serial
+                     dispatch rounds/sec (replay-verified recordings)
   convergence     -- Theorem 4.5 O(1/t) envelope
   mixing_kernel   -- Pallas D2D-mixing kernel vs oracle
   roofline_table  -- §Roofline terms from dry-run artifacts (if present)
@@ -40,12 +42,14 @@ import argparse
 import json
 import time
 
-from . import (comm_cost, convergence, dropout_sweep, mixing_kernel,
-               roofline_table, singular_bounds, topology_ablation)
+from . import (comm_cost, convergence, dropout_sweep, ingest_throughput,
+               mixing_kernel, roofline_table, singular_bounds,
+               topology_ablation)
 
 BENCHES = ("singular_bounds", "topology_ablation", "comm_cost",
            "dropout_sweep", "adaptive_sweep", "staleness_sweep",
-           "convergence", "mixing_kernel", "roofline_table")
+           "ingest_sweep", "convergence", "mixing_kernel",
+           "roofline_table")
 
 # payload-byte fields pinned by --check-baseline: deterministic models /
 # measurements (never wall times), so any increase is a real regression
@@ -191,6 +195,10 @@ def main(argv=None) -> int:
             results[name] = dropout_sweep.run_staleness(
                 buffers=(None, 6) if args.fast else (None, 12, 6),
                 rounds=3 if args.fast else 6)
+        elif name == "ingest_sweep":
+            results[name] = ingest_throughput.run(
+                rounds=4 if args.fast else 8,
+                d=384 if args.fast else 768)
         elif name == "convergence":
             results[name] = convergence.run(rounds=10 if args.fast else 40,
                                             plan_path=args.plan)

@@ -13,12 +13,12 @@ from .distributed import (MIXINGS, make_train_step,
 from .engine import (Engine, ExecutionConfig, LocalEngine, MeshEngine,
                      make_engine, resolve_backend)
 from .faults import (FAILURE_KINDS, LATENCY_KINDS, FaultSpec, FaultTrace,
-                     parse_fault_spec, sample_trace)
+                     draw_latency, parse_fault_spec, sample_trace)
 from .packing import (GroupSpec, GroupedPackSpec, apply_aggregate_row,
                       pack, pack_spec, unpack, unpack_row)
 from .plan import PlanRow, RoundPlan, plan_rows
 from .stream import (STALENESS_KINDS, StreamConfig, StreamEngine,
-                     staleness_weight)
+                     closure_time, consume_arrivals, staleness_weight)
 
 __all__ = ["MIXINGS", "make_train_step", "make_scanned_train_steps",
            "make_prefill_step", "make_decode_step",
@@ -28,6 +28,6 @@ __all__ = ["MIXINGS", "make_train_step", "make_scanned_train_steps",
            "LocalEngine", "MeshEngine", "make_engine", "resolve_backend",
            "PlanRow", "RoundPlan", "plan_rows",
            "FAILURE_KINDS", "LATENCY_KINDS", "FaultSpec", "FaultTrace",
-           "parse_fault_spec", "sample_trace",
+           "parse_fault_spec", "sample_trace", "draw_latency",
            "STALENESS_KINDS", "StreamConfig", "StreamEngine",
-           "staleness_weight"]
+           "closure_time", "consume_arrivals", "staleness_weight"]

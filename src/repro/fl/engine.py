@@ -83,6 +83,10 @@ class ExecutionConfig:
     tune the Pallas kernels (``interpret=None`` resolves per platform).
     ``stream`` (a ``repro.fl.stream.StreamConfig``) selects the
     event-driven semi-async runtime instead of the synchronous ones.
+    ``runtime`` (a ``repro.runtime.RuntimeConfig``, requires ``stream``)
+    upgrades the semi-async runtime to the wall-clock ingestion engine:
+    client training on worker threads, measured arrivals, and a
+    replayable ``Recording`` (``repro.runtime.IngestEngine``).
     ``quant`` (a ``repro.fl.packing.QuantSpec``) turns on quantized
     payload groups -- it overrides a plan-carried ``plan.quant``; either
     source is validated against the effective backend at execute time
@@ -99,6 +103,7 @@ class ExecutionConfig:
     model_cfg: Any = None
     stream: Any = None
     quant: Any = None
+    runtime: Any = None
 
 
 def _check_quant_backend(quant, backend: str, mesh: bool) -> None:
@@ -130,6 +135,11 @@ def resolve_backend(cfg: ExecutionConfig) -> str:
     the record_mixed upgrade to 'aggregate', and every invalid
     combination.
     """
+    if cfg.runtime is not None and cfg.stream is None:
+        raise ValueError(
+            "cfg.runtime (the wall-clock ingestion engine) extends the "
+            "semi-async runtime; it requires cfg.stream (a StreamConfig) "
+            "for the closure policy")
     if cfg.stream is not None:
         if cfg.mesh is not None:
             raise ValueError("the stream runtime is single-host; "
@@ -513,6 +523,9 @@ def make_engine(cfg: ExecutionConfig, loss_fn=None) -> Engine:
     runtime dispatch the server (or any driver) needs."""
     if cfg.stream is not None:
         # deferred: stream imports back into this module at class init
+        if cfg.runtime is not None:
+            from repro.runtime import IngestEngine
+            return IngestEngine(loss_fn, cfg)
         from .stream import StreamEngine
         return StreamEngine(loss_fn, cfg)
     if cfg.mesh is not None:

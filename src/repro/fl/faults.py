@@ -45,7 +45,7 @@ import numpy as np
 
 __all__ = [
     "FAILURE_KINDS", "LATENCY_KINDS", "FaultSpec", "FaultTrace",
-    "sample_trace", "parse_fault_spec",
+    "sample_trace", "parse_fault_spec", "draw_latency",
     "iid_active", "markov_active", "cluster_active",
 ]
 
@@ -364,6 +364,20 @@ def _draw_latency(rng: np.random.Generator, kind: str,
             .astype(np.float32)
     raise ValueError(f"latency must be one of {LATENCY_KINDS}, "
                      f"got {kind!r}")   # pragma: no cover - spec validates
+
+
+def draw_latency(rng: np.random.Generator, kind: str,
+                 params: Optional[Mapping[str, float]] = None,
+                 shape=()) -> np.ndarray:
+    """Public latency sampler: one draw from a ``LATENCY_KINDS``
+    distribution with defaults filled in, float32.  The wall-clock
+    runtime's load generators and benchmarks sample ad-hoc virtual
+    latencies through this instead of hand-rolling distributions, so
+    their draws match what ``sample_trace`` would have produced for the
+    same rng state."""
+    merged = _merged_params(kind, dict(params or {}), _LATENCY_PARAMS,
+                            "latency")
+    return _draw_latency(rng, kind, merged, shape)
 
 
 def sample_trace(spec: FaultSpec, n: int, K: int, *,

@@ -264,6 +264,9 @@ class RoundPlan:
     topology: Optional[TopologySpec] = None   # embedded topology spec
     seed: Optional[int] = None     # planning seed (None: external rng)
     t0: int = 0                    # global index of row 0 (plan slices)
+    source: Optional[str] = None   # None: planned/simulated columns;
+    #                                'measured': arrival_t holds offsets
+    #                                a live ingestion run recorded
 
     def __post_init__(self):
         K, n = self.A_t.shape[0], self.A_t.shape[-1]
@@ -591,6 +594,13 @@ class RoundPlan:
             arrival_t = np.asarray(arrival_t, np.float32)
         return dataclasses.replace(self, arrival_t=arrival_t)
 
+    def with_source(self, source: Optional[str]) -> "RoundPlan":
+        """Tag (or clear) the provenance of the columns.  The ingestion
+        runtime stamps its recordings ``'measured'`` so a plan whose
+        arrival column came from wall-clock measurement is
+        distinguishable from a planned/simulated one downstream."""
+        return dataclasses.replace(self, source=source)
+
     def with_faults(self, trace) -> "RoundPlan":
         """Apply a realized ``repro.fl.faults.FaultTrace``: the trace's
         availability mask (failure chains AND departures) composes into
@@ -702,6 +712,7 @@ class RoundPlan:
                          else self.topology.as_dict()),
             "seed": self.seed,
             "t0": self.t0,
+            "source": self.source,
             # sparse plans serialize the CSR arrays (O(nnz) text, the
             # only way an n = 100_000 plan fits anywhere); dense plans
             # keep the v3 nested-list layout.
@@ -755,6 +766,8 @@ class RoundPlan:
                       else TopologySpec.from_dict(spec)),
             seed=d.get("seed"),
             t0=int(d.get("t0", 0)),
+            # absent in older payloads: provenance defaults to planned
+            source=d.get("source"),
             algorithm=d["algorithm"],
             A_t=A_t,
             tau_t=np.asarray(d["tau_t"], np.float32),
@@ -793,6 +806,8 @@ class RoundPlan:
         if self.algorithm != other.algorithm:
             return False
         if self.quant != other.quant:   # frozen dataclass: field-wise eq
+            return False
+        if self.source != other.source:
             return False
         for f in dataclasses.fields(self):
             a, b = getattr(self, f.name), getattr(other, f.name)

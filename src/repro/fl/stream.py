@@ -63,7 +63,7 @@ from . import packing
 from .faults import FaultSpec, FaultTrace, sample_trace
 
 __all__ = ["STALENESS_KINDS", "StreamConfig", "StreamEngine",
-           "staleness_weight"]
+           "closure_time", "consume_arrivals", "staleness_weight"]
 
 PyTree = Any
 
@@ -106,6 +106,14 @@ class StreamConfig:
     ``faults``        optional ``FaultSpec``; with ``fault_seed`` it
                       fully determines the fault trajectory
                       (``sample_trace``), so runs replay bitwise.
+    ``client_optim``  optional per-client local-optimizer assignment
+                      (``repro.optim.parse_client_optim`` syntax:
+                      'sgd' | 'adam' | 'sgd,adam,...' round-robin).
+                      Heterogeneous payloads are computed eagerly at
+                      dispatch (optimizer state is sequential), so the
+                      synchronous fast path never fires -- the pristine
+                      run is NOT bitwise-equal to ``LocalEngine``, but
+                      replay-from-recording still is.
     """
     buffer: Optional[int] = None
     deadline: float = math.inf
@@ -114,6 +122,7 @@ class StreamConfig:
     max_staleness: int = 16
     faults: Optional[FaultSpec] = None
     fault_seed: int = 0
+    client_optim: Optional[str] = None
 
     def __post_init__(self):
         if self.buffer is not None and self.buffer < 1:
@@ -126,6 +135,9 @@ class StreamConfig:
         if self.max_staleness < 0:
             raise ValueError(
                 f"max_staleness must be >= 0, got {self.max_staleness}")
+        if self.client_optim is not None:
+            from repro.optim import parse_client_optim
+            parse_client_optim(self.client_optim, 1)   # names validate
 
 
 @dataclasses.dataclass
@@ -137,6 +149,62 @@ class _Cohort:
     pending: Dict[int, float]            # client -> absolute arrival time
     expected: Set[int]                   # everyone the plan said uploads
     payload: Any = None                  # packed bufs / delta tree (lazy)
+
+
+def closure_time(cohorts: Dict[int, _Cohort], t: int, now: float,
+                 S: StreamConfig) -> Tuple[float, bool]:
+    """The FedBuff/deadline closure rule -- ONE scheduler body.
+
+    ``C_t = min(target, now + deadline)`` where ``target`` is the b-th
+    unconsumed arrival across cohorts (``buffer=b``) or round ``t``'s
+    own last arrival (``buffer=None``).  Returns ``(C_t,
+    deadline_hit)``.  Both the virtual-time ``StreamEngine`` and the
+    wall-clock ``repro.runtime`` ingestion engine call THIS function --
+    the wall runtime merely feeds it measured arrival positions (plus
+    elapsed lower bounds for uploads still in flight), which is what
+    makes live closure decisions and virtual-time replay the same
+    arithmetic by construction rather than by tolerance.
+    """
+    if S.buffer is None:
+        # synchronous-style: wait for round t's own full cohort
+        waits = sorted(cohorts[t].pending.values())
+    else:
+        # FedBuff: wait until b unconsumed uploads (any round)
+        # have landed; if fewer than b will ever arrive, wait
+        # for all of them (the deadline still caps the wait)
+        waits = sorted(a for c in cohorts.values()
+                       for a in c.pending.values())[:S.buffer]
+    target = max(waits[-1] if waits else now, now)
+    C_t = min(target, now + S.deadline)
+    return C_t, target > C_t
+
+
+def consume_arrivals(cohorts: Dict[int, _Cohort], t: int, C_t: float,
+                     S: StreamConfig
+                     ) -> Tuple[List[Tuple[int, List[int], float]],
+                                int, int, int]:
+    """Consume every pending arrival ``<= C_t`` (shared with the
+    wall-clock runtime, like ``closure_time``).  Returns
+    ``(groups, late, stale_sum, stale_max)`` where ``groups`` is the
+    per-cohort ``(r, client_idx, staleness_weight)`` list; consumed
+    entries are removed from each cohort's ``pending``."""
+    groups: List[Tuple[int, List[int], float]] = []
+    late = stale_sum = stale_max = 0
+    for r in sorted(cohorts):
+        c = cohorts[r]
+        idx = sorted(i for i, a in c.pending.items() if a <= C_t)
+        if not idx:
+            continue
+        s = t - r
+        w = staleness_weight(s, S.staleness, S.staleness_param)
+        groups.append((r, idx, w))
+        for i in idx:
+            del c.pending[i]
+        if s > 0:
+            late += len(idx)
+            stale_sum += s * len(idx)
+            stale_max = max(stale_max, s)
+    return groups, late, stale_sum, stale_max
 
 
 class StreamEngine:
@@ -194,7 +262,18 @@ class StreamEngine:
     # -- execution ----------------------------------------------------------
 
     def execute(self, plan, params, batches, *, eval_fn=None, eval_every=1,
-                energy_ratio=0.1):
+                energy_ratio=0.1, trace=None):
+        """Run the plan in virtual time.
+
+        ``trace=`` replays a *recorded* trajectory: the plan is used
+        as-is (already realized -- faults folded into ``active_t``, the
+        ``arrival_t`` column carrying the recorded, possibly measured,
+        offsets) and the injected ``FaultTrace`` supplies only the
+        duplicate flags/delays for billing.  Requires
+        ``cfg.stream.faults is None`` (nothing is sampled); this is how
+        a ``repro.runtime`` traffic recording reproduces its live run's
+        History bitwise.
+        """
         from .engine import _check_batches
         _check_batches(plan, batches)
         if plan.quant is not None:
@@ -205,9 +284,17 @@ class StreamEngine:
                 "residual; strip with plan.with_quant(None) or run on "
                 "LocalEngine/MeshEngine")
         cfg, S = self.cfg, self.stream
-        plan, trace = self._apply_faults(plan)
-        self.last_trace = trace
-        self.last_realized_plan = plan
+        if trace is not None:
+            if S.faults is not None:
+                raise ValueError(
+                    "trace= injects a recorded trajectory; the plan is "
+                    "already realized, so cfg.stream.faults must be None")
+            self.last_trace = trace
+            self.last_realized_plan = plan
+        else:
+            plan, trace = self._apply_faults(plan)
+            self.last_trace = trace
+            self.last_realized_plan = plan
         K, n = plan.n_rounds, plan.n_clients
 
         arrival = (np.asarray(plan.arrival_t, np.float64)
@@ -234,6 +321,7 @@ class StreamEngine:
         def _deltas(p, b, eta):
             return client_deltas(self.loss_fn, p, b, eta)
         deltas_fn = jax.jit(_deltas) if cfg.jit else _deltas
+        hetero = self._make_hetero(params, n)
 
         history = History(algorithm=plan.algorithm,
                           ledger=CommLedger(energy_ratio=energy_ratio))
@@ -260,43 +348,22 @@ class StreamEngine:
                     lost += 1
             cohorts[t] = _Cohort(t=t, snapshot=params, pending=pending,
                                  expected=expected)
+            if hetero is not None:
+                # eager, dispatch-order payload: per-client optimizer
+                # state is sequential, so the evaluation order must be
+                # the dispatch order on both the live and replay sides
+                cohorts[t].payload = self._cohort_payload(
+                    hetero, params, batches[t], eta_seq[t])
 
             # ---- evict over-stale cohorts (their uploads are dead) -------
             for r in [r for r in cohorts if t - r > S.max_staleness]:
                 lost += len(cohorts[r].pending)
                 del cohorts[r]
 
-            # ---- closure time C_t ----------------------------------------
-            if S.buffer is None:
-                # synchronous-style: wait for round t's own full cohort
-                waits = sorted(cohorts[t].pending.values())
-            else:
-                # FedBuff: wait until b unconsumed uploads (any round)
-                # have landed; if fewer than b will ever arrive, wait
-                # for all of them (the deadline still caps the wait)
-                waits = sorted(a for c in cohorts.values()
-                               for a in c.pending.values())[:S.buffer]
-            target = max(waits[-1] if waits else now, now)
-            C_t = min(target, now + S.deadline)
-            deadline_hit = target > C_t
-
-            # ---- consume every arrival <= C_t ----------------------------
-            groups: List[Tuple[int, List[int], float]] = []
-            late = stale_sum = stale_max = 0
-            for r in sorted(cohorts):
-                c = cohorts[r]
-                idx = sorted(i for i, a in c.pending.items() if a <= C_t)
-                if not idx:
-                    continue
-                s = t - r
-                w = staleness_weight(s, S.staleness, S.staleness_param)
-                groups.append((r, idx, w))
-                for i in idx:
-                    del c.pending[i]
-                if s > 0:
-                    late += len(idx)
-                    stale_sum += s * len(idx)
-                    stale_max = max(stale_max, s)
+            # ---- closure time C_t + consume every arrival <= C_t ---------
+            C_t, deadline_hit = closure_time(cohorts, t, now, S)
+            groups, late, stale_sum, stale_max = consume_arrivals(
+                cohorts, t, C_t, S)
             accepted = sum(len(idx) for _, idx, _ in groups)
             W = sum(w * len(idx) for _, idx, w in groups)
             dup_n = sum(1 for a in dup_events if a <= C_t)
@@ -385,6 +452,12 @@ class StreamEngine:
             raise ValueError(
                 "the stream runtime slices dense A_t rows; build the "
                 "ControlLoop with sparse=False")
+        if S.client_optim is not None:
+            raise ValueError(
+                "client_optim is not supported under controlled "
+                "execution: the realized plan carries no optimizer "
+                "state to replay heterogeneous payloads against; run "
+                "execute() with a precomputed plan instead")
         K, n = len(batches), loop.n
         trace = None
         if S.faults is not None:
@@ -449,31 +522,9 @@ class StreamEngine:
                 lost += len(cohorts[r].pending)
                 del cohorts[r]
 
-            if S.buffer is None:
-                waits = sorted(cohorts[t].pending.values())
-            else:
-                waits = sorted(a for c in cohorts.values()
-                               for a in c.pending.values())[:S.buffer]
-            target = max(waits[-1] if waits else now, now)
-            C_t = min(target, now + S.deadline)
-            deadline_hit = target > C_t
-
-            groups: List[Tuple[int, List[int], float]] = []
-            late = stale_sum = stale_max = 0
-            for r in sorted(cohorts):
-                c = cohorts[r]
-                idx = sorted(i for i, a in c.pending.items() if a <= C_t)
-                if not idx:
-                    continue
-                s = t - r
-                w = staleness_weight(s, S.staleness, S.staleness_param)
-                groups.append((r, idx, w))
-                for i in idx:
-                    del c.pending[i]
-                if s > 0:
-                    late += len(idx)
-                    stale_sum += s * len(idx)
-                    stale_max = max(stale_max, s)
+            C_t, deadline_hit = closure_time(cohorts, t, now, S)
+            groups, late, stale_sum, stale_max = consume_arrivals(
+                cohorts, t, C_t, S)
             accepted = sum(len(idx) for _, idx, _ in groups)
             W = sum(w * len(idx) for _, idx, w in groups)
             dup_n = sum(1 for a in dup_events if a <= C_t)
@@ -535,18 +586,50 @@ class StreamEngine:
     # -- internals ----------------------------------------------------------
 
     @staticmethod
-    def _is_sync_closure(groups, cohorts, t) -> bool:
-        """True iff this closure is a pristine synchronous round: exactly
-        one group, it is round ``t`` itself, at weight 1.0, covering the
-        full expected cohort, whose payload was never computed -- then
-        the globals it trained from ARE the current globals and the
-        jitted synchronous round function applies verbatim."""
+    def _pristine(groups, cohorts, t) -> bool:
+        """True iff this closure consumed exactly round ``t``'s own full
+        expected cohort at weight 1.0 -- the *shape* of a synchronous
+        round, independent of whether a payload was precomputed."""
         if len(groups) != 1:
             return False
         r, idx, w = groups[0]
         c = cohorts.get(t)
         return (r == t and w == 1.0 and c is not None
-                and c.payload is None and set(idx) == c.expected)
+                and set(idx) == c.expected)
+
+    @staticmethod
+    def _is_sync_closure(groups, cohorts, t) -> bool:
+        """True iff this closure is a pristine synchronous round whose
+        payload was never computed -- then the globals it trained from
+        ARE the current globals and the jitted synchronous round
+        function applies verbatim.  (A pristine closure with an eagerly
+        computed payload -- heterogeneous optimizers -- must take the
+        aggregate path: the payload is not plain-SGD deltas.)"""
+        return (StreamEngine._pristine(groups, cohorts, t)
+                and cohorts[t].payload is None)
+
+    def _make_hetero(self, params, n):
+        """Build the heterogeneous local-training runner (or None).
+        One per execute(): per-client optimizer state starts fresh at
+        round 0 on both the live and replay sides."""
+        if self.stream.client_optim is None:
+            return None
+        from repro.optim import HeteroClientOptimizers, parse_client_optim
+        names = parse_client_optim(self.stream.client_optim, n)
+        return HeteroClientOptimizers(self.loss_fn, params, names,
+                                      jit=self.cfg.jit)
+
+    def _cohort_payload(self, hetero, snapshot, batch, eta):
+        """Eager dispatch-time payload: the heterogeneous delta tree for
+        ALL n clients (every client's optimizer state advances whether
+        or not its upload is later consumed), packed per backend exactly
+        like the lazy path."""
+        d = hetero.deltas(snapshot, batch, eta)
+        if self.backend == "einsum":
+            return d
+        if self._spec is None:
+            self._spec = packing.pack_spec(d)
+        return packing.pack(d, self._spec)
 
     def _aggregate_groups(self, params, groups, cohorts, batches,
                           deltas_fn, A_seq, tau_seq, eta_seq, active_seq,

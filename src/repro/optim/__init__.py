@@ -1,5 +1,7 @@
 """Optimizer substrate."""
 
+from .hetero import (CLIENT_OPTIMIZERS, HeteroClientOptimizers,
+                     parse_client_optim)
 from .optimizers import (Optimizer, adam, adamw, clip_by_global_norm,
                          momentum, sgd)
 from .schedules import (constant, cosine, exponential, inverse_time,
@@ -9,4 +11,5 @@ __all__ = [
     "Optimizer", "sgd", "momentum", "adam", "adamw", "clip_by_global_norm",
     "constant", "exponential", "paper_experimental", "inverse_time",
     "cosine", "warmup_cosine",
+    "CLIENT_OPTIMIZERS", "HeteroClientOptimizers", "parse_client_optim",
 ]

@@ -1,0 +1,167 @@
+"""Per-client optimizer heterogeneity for the semi-async runtimes.
+
+The paper's local step is plain SGD for every client (eq. 1), which is
+why ``client_deltas`` can vmap one optimizer over the whole population.
+Real fleets are heterogeneous: phones run SGD, workstations run Adam
+(the serverless semi-decentralized template, arXiv:2606.06687).  This
+module generalizes the local-training step to a *per-client* optimizer
+assignment drawn from the ``repro.optim`` zoo, with per-client optimizer
+state carried across cohorts.
+
+Determinism contract (what makes heterogeneous runs replayable): the
+assignment is a pure function of the spec string and ``n``
+(``parse_client_optim``), clients are grouped by optimizer and each
+group runs one vmapped ``lax.scan`` -- so given the same dispatch-order
+sequence of ``(snapshot, batches, eta)`` inputs, the produced deltas and
+the evolved states are bitwise identical.  The semi-async engines
+therefore compute heterogeneous payloads *eagerly at dispatch, in
+dispatch order* (states are sequential state; a lazy at-closure
+evaluation would thread them in a schedule-dependent order).
+
+``deltas`` advances the state of EVERY client each call, whether or not
+that client's upload is later consumed -- consumption is a server-side
+decision the client cannot see.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .optimizers import Optimizer, adam, adamw, momentum, sgd
+
+__all__ = ["CLIENT_OPTIMIZERS", "HeteroClientOptimizers",
+           "parse_client_optim"]
+
+PyTree = Any
+
+# name -> zero-arg factory (defaults only: the assignment string stays a
+# flat comma list, JSON-trivial and order-stable)
+CLIENT_OPTIMIZERS: Dict[str, Callable[[], Optimizer]] = {
+    "sgd": sgd,
+    "momentum": momentum,
+    "adam": adam,
+    "adamw": adamw,
+}
+
+
+def parse_client_optim(spec: str, n: int) -> Tuple[str, ...]:
+    """``'sgd'`` | ``'adam'`` | ``'sgd,adam,...'`` -> per-client names.
+
+    A single name assigns every client that optimizer; a comma list is
+    dealt round-robin by client index (``names[i % len(names)]``), so
+    the assignment is a pure function of ``(spec, n)`` and identical on
+    the live and replay sides.
+    """
+    names = [s.strip() for s in str(spec).split(",") if s.strip()]
+    if not names:
+        raise ValueError(f"empty client_optim spec {spec!r}")
+    for name in names:
+        if name not in CLIENT_OPTIMIZERS:
+            raise ValueError(
+                f"unknown client optimizer {name!r}; available: "
+                f"{tuple(sorted(CLIENT_OPTIMIZERS))}")
+    return tuple(names[i % len(names)] for i in range(n))
+
+
+class HeteroClientOptimizers:
+    """Stateful heterogeneous local-training runner.
+
+    Clients are grouped by optimizer name; each group owns one vmapped
+    T-step runner and a stacked per-client state tree.  ``deltas``
+    computes every client's local-update delta ``x_i^(T) - x^(t)``
+    against the given snapshot and scatters the group results back into
+    one ``(n, ...)``-leading tree (the same layout ``client_deltas``
+    returns, so the packing/aggregation layers are unchanged).
+    """
+
+    def __init__(self, loss_fn, params: PyTree,
+                 assignment: Sequence[str], jit: bool = True):
+        self.assignment = tuple(assignment)
+        self.n = len(self.assignment)
+        if self.n < 1:
+            raise ValueError("need at least one client")
+        by_name: Dict[str, List[int]] = {}
+        for i, name in enumerate(self.assignment):
+            if name not in CLIENT_OPTIMIZERS:
+                raise ValueError(f"unknown client optimizer {name!r}")
+            by_name.setdefault(name, []).append(i)
+        # group order: sorted by name -- stable across sessions, never
+        # dependent on dict insertion order of the spec string
+        self._groups: List[Tuple[str, jnp.ndarray]] = [
+            (name, jnp.asarray(by_name[name], jnp.int32))
+            for name in sorted(by_name)]
+        self._runners = {}
+        self._states: Dict[str, PyTree] = {}
+        for name, idx in self._groups:
+            opt = CLIENT_OPTIMIZERS[name]()
+            run = _group_runner(opt, loss_fn)
+            self._runners[name] = jax.jit(run) if jit else run
+            st0 = opt.init(params)
+            g = int(idx.shape[0])
+            self._states[name] = jax.tree.map(
+                lambda x: jnp.stack([x] * g), st0)
+
+    def warmup(self, global_params: PyTree, round_batches: PyTree,
+               eta) -> None:
+        """Compile every group runner without advancing any state (the
+        runners are pure; ``deltas`` is what commits state).  The
+        wall-clock runtime calls this before its clock starts so JIT
+        latency never pollutes round-0 measured arrivals."""
+        lr = jnp.asarray(eta, jnp.float32)
+        for name, idx in self._groups:
+            batches_g = jax.tree.map(lambda b: b[idx], round_batches)
+            jax.block_until_ready(self._runners[name](
+                global_params, batches_g, self._states[name], lr))
+
+    @property
+    def states(self) -> Dict[str, PyTree]:
+        """Per-group stacked optimizer states (leading axis = group
+        size); read-only view for tests/checkpointing."""
+        return dict(self._states)
+
+    def deltas(self, global_params: PyTree, round_batches: PyTree,
+               eta) -> PyTree:
+        """One local-training round for all ``n`` clients.
+
+        ``round_batches`` leaves are ``(n, T, ...)``.  Returns the delta
+        tree with leading axis ``n`` (param dtypes preserved) and
+        advances every group's optimizer state in place.
+        """
+        lr = jnp.asarray(eta, jnp.float32)
+        out = jax.tree.map(
+            lambda p: jnp.zeros((self.n,) + p.shape, p.dtype),
+            global_params)
+        for name, idx in self._groups:
+            batches_g = jax.tree.map(lambda b: b[idx], round_batches)
+            d, st = self._runners[name](global_params, batches_g,
+                                        self._states[name], lr)
+            self._states[name] = st
+            out = jax.tree.map(lambda o, dd: o.at[idx].set(dd), out, d)
+        return out
+
+
+def _group_runner(opt: Optimizer, loss_fn):
+    """One optimizer's vmapped T-step local-training function:
+    ``(snapshot, batches_g, states_g, lr) -> (deltas_g, states_g')``
+    with group-leading axes on batches/states/deltas."""
+    grad_fn = jax.grad(loss_fn)
+
+    def run_one(gp, b, st, lr):
+        def step(carry, batch):
+            p, s = carry
+            g = grad_fn(p, batch)
+            p2, s2 = opt.update(g, s, p, lr)
+            return (p2, s2), None
+
+        (final, st2), _ = jax.lax.scan(step, (gp, st), b)
+        delta = jax.tree.map(lambda f, g0: f - g0, final, gp)
+        return delta, st2
+
+    def run_group(gp, batches_g, states_g, lr):
+        return jax.vmap(run_one, in_axes=(None, 0, 0, None))(
+            gp, batches_g, states_g, lr)
+
+    return run_group

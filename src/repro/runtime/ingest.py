@@ -1,0 +1,466 @@
+"""IngestEngine: the wall-clock ingestion runtime.
+
+``StreamEngine`` *simulates* semi-async rounds in virtual time;
+``IngestEngine`` *runs* them: simulated clients train on worker threads
+against snapshot params and upload through a bounded queue with real
+(scaled) latency, while the server loop ingests arrivals and closes
+rounds FedBuff-style.  It subclasses ``StreamEngine`` and reuses its
+fault sampling, payload packing, staleness-weighted aggregation, and
+telemetry verbatim -- only the *source of arrival positions* changes,
+through the ``repro.runtime.clock`` abstraction.
+
+The guarded commit (how live closure == replay closure, bitwise)
+----------------------------------------------------------------
+Every landed upload gets a measured float32 offset
+``(wall_land - wall_dispatch) / time_scale``; its virtual position is
+``D_r + offset`` -- exactly the number a replay reads from the recorded
+``arrival_t`` column.  For uploads still in flight the server only
+knows a *lower bound*: the elapsed time since their cohort's dispatch
+(float32 round-to-nearest is monotone, so the eventual measured offset
+cannot round below a bound taken earlier).  The loop inserts those
+lower bounds into the pending view, evaluates the shared
+``closure_time`` rule, and COMMITS only when every in-flight bound is
+strictly beyond the candidate ``C_t`` -- then no upload that has not
+landed could have changed the decision, so the virtual-time replay
+(which knows all positions up front) computes the identical ``C_t``,
+consumption set, and staleness weights.  Otherwise the loop sleeps
+until the queue stirs and retries.
+
+Overlapping dispatch
+--------------------
+``overlap=True`` computes each cohort's payload on a worker at dispatch
+(upload timers start at payload-ready), so round ``t+1`` trains while
+round ``t``'s stragglers drain; ``overlap=False`` computes payloads
+lazily at closure on the server thread (the serialized baseline the
+``ingest_throughput`` benchmark contrasts).  A pristine closure
+discards any precomputed payload and runs the synchronous jitted round
+function -- the same fast path the replay side takes, keeping the
+anchor bitwise.  Heterogeneous optimizers (``client_optim``) always
+train eagerly on a dedicated ordered worker: per-client optimizer state
+is sequential, so payloads must evaluate in dispatch order.
+
+Known, documented divergence: backpressure drops.  A dropped upload is
+billed ``lost`` in the live round whose gather observed the drop, but
+its recorded arrival stays ``inf`` so a replay counts it lost at its
+dispatch round.  Totals agree; per-round attribution differs.  The
+anchor tests run with drop-free capacities.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.metrics import CommLedger
+from repro.core.rounds import client_deltas, make_round_fn
+from repro.core.server import History, RoundRecord
+from repro.fl import packing
+from repro.fl.stream import (StreamEngine, _Cohort, closure_time,
+                             consume_arrivals)
+from .clock import Clock, VirtualClock, WallClock
+from .queueing import DROP_POLICIES
+from .recorder import (Recording, TrafficRecorder, history_digest,
+                       params_sha256)
+
+__all__ = ["CLOCK_KINDS", "IngestEngine", "RuntimeConfig"]
+
+CLOCK_KINDS = ("virtual", "wall")
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """The ingestion-runtime knobs (``ExecutionConfig.runtime``).
+
+    ``clock``           'wall' runs real threads and measures arrivals;
+                        'virtual' degenerates to ``StreamEngine``
+                        semantics bitwise (arrivals from the plan).
+    ``time_scale``      wall seconds per virtual time unit -- latency
+                        distributions in ``FaultSpec`` stay in virtual
+                        units, tests shrink this to keep wall time low.
+    ``workers``         training worker threads (the client fleet).
+    ``overlap``         dispatch-ahead (see module docstring).
+    ``queue_capacity``  bound on the upload queue (None = unbounded).
+    ``drop_policy``     'block' | 'drop_oldest' | 'reject' at capacity.
+    ``wall_budget``     graceful stop after this many wall seconds: the
+                        current round still closes, the recorder
+                        flushes, and the sliced recording replays.
+    """
+    clock: str = "wall"
+    time_scale: float = 0.01
+    workers: int = 4
+    overlap: bool = True
+    queue_capacity: Optional[int] = None
+    drop_policy: str = "block"
+    wall_budget: Optional[float] = None
+
+    def __post_init__(self):
+        if self.clock not in CLOCK_KINDS:
+            raise ValueError(
+                f"clock must be one of {CLOCK_KINDS}, got {self.clock!r}")
+        if not self.time_scale > 0:
+            raise ValueError(
+                f"time_scale must be > 0, got {self.time_scale}")
+        if self.workers < 1:
+            raise ValueError(f"workers must be >= 1, got {self.workers}")
+        if self.queue_capacity is not None and self.queue_capacity < 1:
+            raise ValueError(f"queue_capacity must be >= 1, got "
+                             f"{self.queue_capacity}")
+        if self.drop_policy not in DROP_POLICIES:
+            raise ValueError(f"drop_policy must be one of "
+                             f"{DROP_POLICIES}, got {self.drop_policy!r}")
+        if self.wall_budget is not None and not self.wall_budget > 0:
+            raise ValueError(
+                f"wall_budget must be > 0, got {self.wall_budget}")
+
+
+class IngestEngine(StreamEngine):
+    """Wall-clock ingestion runtime (see module docstring).
+
+    After ``execute``: ``last_recording`` holds the flushed
+    ``Recording`` (measured plan + trace + closures + run meta);
+    ``last_realized_plan`` is that recording's plan.
+    """
+
+    def __init__(self, loss_fn, cfg):
+        super().__init__(loss_fn, cfg)
+        if cfg.runtime is None:
+            raise ValueError("IngestEngine requires cfg.runtime "
+                             "(a RuntimeConfig)")
+        self.runtime: RuntimeConfig = cfg.runtime
+        self.last_recording: Optional[Recording] = None
+        import threading
+        self._stop = threading.Event()
+
+    def request_stop(self) -> None:
+        """Ask the server loop (from any thread / signal handler) to
+        stop after the round currently closing; the recorder flushes a
+        loadable, replayable prefix recording."""
+        self._stop.set()
+
+    def execute_controlled(self, *a, **kw):
+        raise ValueError(
+            "controlled execution is not supported on the ingestion "
+            "runtime: the control loop generates rows online, but the "
+            "wall runtime needs the full plan to schedule uploads; run "
+            "the controller on StreamEngine and ingest its emitted plan")
+
+    def execute(self, plan, params, batches, *, eval_fn=None, eval_every=1,
+                energy_ratio=0.1, trace=None):
+        from repro.fl.engine import _check_batches
+        if trace is not None:
+            raise ValueError(
+                "trace= replay goes through the virtual-time "
+                "StreamEngine (Recording.replay), not the ingestion "
+                "runtime")
+        _check_batches(plan, batches)
+        if plan.quant is not None:
+            raise ValueError(
+                "quantized payloads are not supported on the stream "
+                "runtime; strip with plan.with_quant(None)")
+        cfg, S, R = self.cfg, self.stream, self.runtime
+        plan, fault_trace = self._apply_faults(plan)
+        self.last_trace = fault_trace
+        K, n = plan.n_rounds, plan.n_clients
+        arrival = (np.asarray(plan.arrival_t, np.float64)
+                   if plan.arrival_t is not None
+                   else np.zeros((K, n), np.float64))
+
+        import jax.numpy as jnp
+        A_seq = jnp.asarray(
+            plan.A_t.dense() if plan.is_sparse else plan.A_t, jnp.float32)
+        tau_seq = jnp.asarray(plan.tau_t, jnp.float32)
+        m_seq = jnp.asarray(plan.m_t, jnp.float32)
+        eta_seq = jnp.asarray(plan.eta_t, jnp.float32)
+        active_seq = (jnp.asarray(plan.active_t, jnp.float32)
+                      if plan.has_dropout else None)
+
+        round_fn = make_round_fn(self.loss_fn, jit=cfg.jit,
+                                 mixing_backend=self.backend,
+                                 chunk=cfg.chunk, interpret=cfg.interpret)
+
+        def _deltas(p, b, eta):
+            return client_deltas(self.loss_fn, p, b, eta)
+        deltas_fn = jax.jit(_deltas) if cfg.jit else _deltas
+        hetero = self._make_hetero(params, n)
+
+        wall = R.clock == "wall"
+        if wall:
+            # compile before the clock starts: a cold JIT can outlive
+            # several deadline windows, which would record every round-0
+            # upload many virtual units late
+            self._warmup(round_fn, deltas_fn, hetero, params, batches,
+                         A_seq, tau_seq, m_seq, eta_seq, active_seq, n)
+        clock: Clock = (WallClock(R.time_scale, workers=R.workers,
+                                  queue_capacity=R.queue_capacity,
+                                  drop_policy=R.drop_policy)
+                        if wall else VirtualClock())
+        rec = TrafficRecorder(K, n)
+        history = History(algorithm=plan.algorithm,
+                          ledger=CommLedger(energy_ratio=energy_ratio))
+        self._spec = None
+        self._stop.clear()
+        cohorts: Dict[int, _Cohort] = {}
+        inflight: Dict[int, Set[int]] = {}     # live cohorts' un-landed
+        orphans: Set[Tuple[int, int]] = set()  # evicted cohorts' un-landed
+        futures: Dict[int, Any] = {}           # cohort -> payload future
+        D_virt: Dict[int, float] = {}
+        dup_events: List[float] = []
+        closures: List[float] = []
+        drops_now = [0]                        # drops seen this gather
+        now = 0.0
+
+        def drain_landings():
+            landed, dropped = clock.drain()
+            for u in landed:
+                off = clock.offset(u.round, u.wall)
+                rec.land(u.round, u.client, off)
+                pos = D_virt[u.round] + float(off)
+                if u.client in inflight.get(u.round, ()):
+                    cohorts[u.round].pending[u.client] = pos
+                    inflight[u.round].discard(u.client)
+                else:
+                    orphans.discard((u.round, u.client))
+                if (fault_trace is not None
+                        and fault_trace.dup[u.round, u.client] > 0):
+                    dup_events.append(pos + float(
+                        fault_trace.dup_delay[u.round, u.client]))
+            for u in dropped:
+                rec.drop(u.round, u.client)
+                if u.client in inflight.get(u.round, ()):
+                    inflight[u.round].discard(u.client)
+                    drops_now[0] += 1    # billed in the observing round
+                else:
+                    # orphan drop: already billed lost at eviction
+                    orphans.discard((u.round, u.client))
+
+        def gather(t):
+            """The guarded commit: drain, bound, decide, retry."""
+            while True:
+                drain_landings()
+                lowers: Dict[int, float] = {}
+                for r, fl in inflight.items():
+                    if not fl:
+                        continue
+                    lo = D_virt[r] + float(clock.lower_offset(r))
+                    lowers[r] = lo
+                    for i in fl:
+                        cohorts[r].pending[i] = lo
+                C_t, deadline_hit = closure_time(cohorts, t, now, S)
+                for r in lowers:
+                    for i in inflight[r]:
+                        del cohorts[r].pending[i]
+                if all(lo > C_t for lo in lowers.values()):
+                    return C_t, deadline_hit
+                gap = min(C_t - lo for lo in lowers.values()
+                          if lo <= C_t)
+                clock.wait(max(1e-3, gap * R.time_scale))
+
+        for t in range(K):
+            if t > 0 and (self._stop.is_set()
+                          or (R.wall_budget is not None
+                              and clock.elapsed() >= R.wall_budget)):
+                break
+            # ---- dispatch round t at D_t = C_{t-1} -----------------------
+            up_row = plan.tau_t[t] * plan.active_t[t]
+            expected = {int(i) for i in np.flatnonzero(up_row > 0)}
+            lost = 0
+            pending: Dict[int, float] = {}
+            D_virt[t] = now
+            if wall:
+                sched = []
+                for i in expected:
+                    delay = arrival[t, i]
+                    if math.isfinite(delay):
+                        sched.append((i, float(delay)))
+                    else:
+                        lost += 1
+                train_fn = None
+                ordered = False
+                # the worker must BLOCK until the payload buffers are
+                # materialized: XLA dispatch is asynchronous, so without
+                # it the future resolves before any FLOPs run and the
+                # whole training cost silently defers into the consuming
+                # round's aggregate -- serializing "overlapped" dispatch.
+                # payload-ready is also the point the upload timers wait
+                # on, so this is exactly when a client could upload.
+                if hetero is not None:
+                    # ordered eager payload: optimizer state is
+                    # sequential, evaluation order = dispatch order
+                    snap, bt, et = params, batches[t], eta_seq[t]
+                    train_fn = (lambda s=snap, b=bt, e=et:
+                                jax.block_until_ready(
+                                    self._cohort_payload(hetero, s, b, e)))
+                    ordered = True
+                elif R.overlap:
+                    snap, bt, et = params, batches[t], eta_seq[t]
+                    train_fn = (lambda s=snap, b=bt, e=et:
+                                jax.block_until_ready(
+                                    self._packed_payload(deltas_fn, s,
+                                                         b, e)))
+                fut = clock.dispatch(t, sched, train_fn=train_fn,
+                                     ordered=ordered)
+                if fut is not None:
+                    futures[t] = fut
+                inflight[t] = {i for i, _ in sched}
+            else:
+                for i in expected:
+                    delay = arrival[t, i]
+                    if math.isfinite(delay):
+                        pending[i] = now + delay
+                        rec.land(t, i, np.float32(delay))
+                        if (fault_trace is not None
+                                and fault_trace.dup[t, i] > 0):
+                            dup_events.append(now + delay + float(
+                                fault_trace.dup_delay[t, i]))
+                    else:
+                        lost += 1
+            cohorts[t] = _Cohort(t=t, snapshot=params, pending=pending,
+                                 expected=expected)
+            if hetero is not None and not wall:
+                cohorts[t].payload = self._cohort_payload(
+                    hetero, params, batches[t], eta_seq[t])
+
+            # ---- evict over-stale cohorts --------------------------------
+            for r in [r for r in cohorts if t - r > S.max_staleness]:
+                gone = inflight.pop(r, set())
+                lost += len(cohorts[r].pending) + len(gone)
+                orphans.update((r, i) for i in gone)
+                del cohorts[r]
+                futures.pop(r, None)
+
+            # ---- guarded closure + consume -------------------------------
+            drops_now[0] = 0
+            C_t, deadline_hit = gather(t)
+            groups, late, stale_sum, stale_max = consume_arrivals(
+                cohorts, t, C_t, S)
+            lost += drops_now[0]
+            accepted = sum(len(idx) for _, idx, _ in groups)
+            W = sum(w * len(idx) for _, idx, w in groups)
+            dup_n = sum(1 for a in dup_events if a <= C_t)
+            dup_events = [a for a in dup_events if a > C_t]
+
+            # ---- aggregate -----------------------------------------------
+            if accepted == 0:
+                pass
+            elif (self._pristine(groups, cohorts, t)
+                  and hetero is None):
+                # pristine closure: run the synchronous jitted round
+                # function and DISCARD any precomputed payload -- the
+                # replay side (payload never computed) takes the same
+                # fast path, keeping the anchor bitwise
+                args = (params, batches[t], A_seq[t], tau_seq[t],
+                        m_seq[t], eta_seq[t])
+                if active_seq is not None:
+                    args = args + (active_seq[t],)
+                params, _ = round_fn(*args)
+            else:
+                for r, _, _ in groups:
+                    fut = futures.get(r)
+                    if fut is not None and cohorts[r].payload is None:
+                        cohorts[r].payload = fut.result()
+                params = self._aggregate_groups(
+                    params, groups, cohorts, batches, deltas_fn,
+                    A_seq, tau_seq, eta_seq, active_seq, W, n)
+
+            for r in [r for r, c in cohorts.items()
+                      if not c.pending and not inflight.get(r)]:
+                del cohorts[r]
+                inflight.pop(r, None)
+                futures.pop(r, None)
+
+            # ---- record --------------------------------------------------
+            rr = RoundRecord(
+                t=plan.t0 + t, m=int(plan.m_planned_t[t]),
+                m_actual=accepted,
+                psi_bound=float(plan.psi_bound_t[t]),
+                d2s=accepted + dup_n, d2d=int(plan.d2d_t[t]),
+                eta=float(plan.eta_t[t]))
+            if eval_fn is not None and (t % eval_every == 0 or t == K - 1):
+                rr.metrics = {k: float(v)
+                              for k, v in eval_fn(params).items()}
+            info: Dict[str, float] = {}
+            if deadline_hit:
+                info["deadline_hit"] = 1.0
+            if late:
+                info["late"] = float(late)
+                info["stale_max"] = float(stale_max)
+                info["stale_mean"] = stale_sum / late
+            if lost:
+                info["lost"] = float(lost)
+            if dup_n:
+                info["dup"] = float(dup_n)
+            if accepted and W != accepted:
+                info["m_weighted"] = float(W)
+            if accepted < int(plan.m_actual_t[t]):
+                info["shortfall"] = float(int(plan.m_actual_t[t])
+                                          - accepted)
+            if info:
+                rr.stream = info
+            history.records.append(rr)
+            history.ledger.add_round(d2s=rr.d2s, d2d=rr.d2d)
+            rec.close_round(C_t)
+            closures.append(C_t)
+            now = C_t
+
+        # ---- graceful finish: flush every in-flight upload ---------------
+        # timers wake early and enqueue forced landings; their measured
+        # offsets exceed the last committed C_t (the guard held), so the
+        # replay leaves them pending exactly like the live run did
+        clock.finish()
+        drain_landings()
+
+        meta = {
+            "clock": R.clock, "time_scale": R.time_scale,
+            "overlap": R.overlap, "workers": R.workers,
+            "queue_capacity": R.queue_capacity,
+            "drop_policy": R.drop_policy,
+            "wall_seconds": clock.elapsed(),
+            "history": history_digest(history),
+            "params_sha256": params_sha256(params),
+        }
+        recording = rec.finalize(plan, S, fault_trace, meta)
+        self.last_recording = recording
+        self.last_realized_plan = recording.plan
+        self.last_closures = closures
+        return params, history
+
+    def _warmup(self, round_fn, deltas_fn, hetero, params, batches,
+                A_seq, tau_seq, m_seq, eta_seq, active_seq, n):
+        """Compile every jitted path the live loop can hit, against the
+        real round-0 shapes, before wall time starts counting.  All
+        calls are pure (heterogeneous state is NOT advanced) and their
+        results are discarded."""
+        args = (params, batches[0], A_seq[0], tau_seq[0], m_seq[0],
+                eta_seq[0])
+        if active_seq is not None:
+            args = args + (active_seq[0],)
+        jax.block_until_ready(round_fn(*args)[0])
+        payload = self._packed_payload(deltas_fn, params, batches[0],
+                                       eta_seq[0])
+        jax.block_until_ready(payload)
+        if hetero is not None:
+            hetero.warmup(params, batches[0], eta_seq[0])
+        # the stale aggregation path (combine rows over a packed
+        # payload) against a synthetic single group
+        from repro.fl.stream import _Cohort
+        cohort = _Cohort(t=0, snapshot=params, pending={},
+                         expected=set(), payload=payload)
+        jax.block_until_ready(self._aggregate_groups(
+            params, [(0, list(range(n)), 0.5)], {0: cohort}, batches,
+            deltas_fn, A_seq, tau_seq, eta_seq, active_seq,
+            W=0.5 * n, n=n))
+
+    def _packed_payload(self, deltas_fn, snapshot, batch, eta):
+        """Overlapped-dispatch payload: plain-SGD cohort deltas packed
+        exactly like the lazy at-closure path in ``_aggregate_groups``
+        (same jitted functions, same inputs -> bitwise-equal buffers)."""
+        d = deltas_fn(snapshot, batch, eta)
+        if self.backend == "einsum":
+            return d
+        if self._spec is None:
+            self._spec = packing.pack_spec(d)
+        return packing.pack(d, self._spec)

@@ -27,7 +27,8 @@ n=70, c=7)`` (see ``repro.launch.train --topology``).
 """
 
 from .families import (ErdosRenyi, Geometric, Hub, KRegular, Learned,
-                       PreferentialAttachment, Ring, SmallWorld)
+                       MeasuredTrace, PreferentialAttachment, Ring,
+                       SmallWorld)
 # imported after .families so the registry *function* ``families`` wins
 # over the submodule attribute of the same name
 from .base import (MEMBERSHIPS, ClusteredTopology, TopologyModel,
@@ -40,5 +41,5 @@ __all__ = [
     "build", "families", "family_defaults", "from_json", "make_partition",
     "make_spec", "parse_spec", "register",
     "KRegular", "ErdosRenyi", "Geometric", "Ring", "SmallWorld", "Hub",
-    "PreferentialAttachment", "Learned",
+    "PreferentialAttachment", "Learned", "MeasuredTrace",
 ]

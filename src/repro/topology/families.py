@@ -32,6 +32,13 @@ Sec. 5 bound machinery:
                  similarity matrix (``set_similarity``, fed by the
                  ``similarity`` controller from inter-client delta
                  cosines); a deterministic ring before the first push
+    measured_trace
+                 replays a recorded per-round edge list (e.g. extracted
+                 from a realized ``RoundPlan`` or a wall-clock
+                 ``Recording`` via ``MeasuredTrace.from_plan``):
+                 rng-free, so measured contact traces become first-class
+                 specs that regenerate bitwise; empty trace falls back
+                 to the deterministic 1-hop ring
 """
 
 from __future__ import annotations
@@ -46,7 +53,7 @@ from repro.core.graphs import (SparseClusterGraph, delete_edge_fraction,
 from .base import ClusteredTopology, register
 
 __all__ = ["KRegular", "ErdosRenyi", "Geometric", "Ring", "SmallWorld",
-           "Hub", "PreferentialAttachment", "Learned"]
+           "Hub", "PreferentialAttachment", "Learned", "MeasuredTrace"]
 
 
 @register("k_regular")
@@ -379,3 +386,74 @@ class Learned(ClusteredTopology):
         if self_loops:
             np.fill_diagonal(W, 1)
         return ensure_positive_out_degree(W, self_loops=self_loops)
+
+
+@register("measured_trace")
+class MeasuredTrace(ClusteredTopology):
+    """Replays a recorded per-round edge list instead of sampling one.
+
+    ``edges`` is a per-round tuple of global directed ``(i, j)`` pairs
+    -- the shape ``MeasuredTrace.from_plan`` extracts from a realized
+    ``RoundPlan`` (including the measured plans inside wall-clock
+    ``Recording`` artifacts), turning observed contact traces into
+    first-class topology specs: JSON-serializable, registry-built, and
+    consumed by the same planner as every generative family.
+
+    Consumes NO rng, so regeneration is trivially bitwise.  Round ``t``
+    indexes the trace modulo its length when ``wrap`` (a periodic
+    contact schedule), else clamps to the last recorded round.  An empty
+    trace degrades to the deterministic 1-hop ring (the same standalone
+    fallback ``learned`` uses), which is what the registry-wide property
+    suites exercise under default parameters.
+    """
+
+    DEFAULTS: Dict = {"edges": (), "wrap": True, "self_loops": True}
+
+    def _round_pairs(self, t):
+        edges = self._params["edges"]
+        if not edges:
+            return None
+        k = (t % len(edges)) if self._params["wrap"] \
+            else min(t, len(edges) - 1)
+        return edges[k]
+
+    def _cluster_W(self, rng, t, verts):
+        p = self._params
+        s = len(verts)
+        self_loops = bool(p["self_loops"])
+        W = np.zeros((s, s), dtype=np.int8)
+        pairs = self._round_pairs(int(t))
+        if pairs is None:
+            idx = np.arange(s)
+            W[idx, (idx + 1) % s] = 1
+        else:
+            local = {int(v): k for k, v in enumerate(verts)}
+            for i, j in pairs:
+                li, lj = local.get(int(i)), local.get(int(j))
+                if li is not None and lj is not None:
+                    W[li, lj] = 1
+        if self_loops:
+            np.fill_diagonal(W, 1)
+        return ensure_positive_out_degree(W, self_loops=self_loops)
+
+    @classmethod
+    def from_plan(cls, plan, *, wrap: bool = True):
+        """A ``TopologySpec`` whose trajectory replays ``plan``'s mixing
+        support: round ``t``'s edge list is the nonzero pattern of
+        ``A_t[t]`` (self-loops carried explicitly, so the rebuilt
+        equal-neighbor matrices match the plan's row support exactly).
+        The spec is built with ``c=1``: the recorded pattern is already
+        block-diagonal over whatever clustering produced it, and
+        equal-neighbor normalization only ever sees in-row (hence
+        in-cluster) entries, so one global cluster reconstructs the same
+        matrices without having to replay membership churn."""
+        from .base import make_spec
+        A = plan.A_t.dense() if plan.is_sparse else np.asarray(plan.A_t)
+        # A[i, j] = W[j, i] / d_j^+ (equal-neighbor): the W edge behind a
+        # nonzero mixing entry runs source j -> destination i
+        edges = tuple(
+            tuple((int(j), int(i)) for i, j in np.argwhere(A[t] != 0))
+            for t in range(A.shape[0]))
+        return make_spec("measured_trace", n=plan.n_clients, c=1,
+                         edges=edges,
+                         wrap=wrap, self_loops=False)

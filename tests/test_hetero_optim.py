@@ -1,0 +1,184 @@
+"""Per-client optimizer heterogeneity (repro.optim.hetero).
+
+Pins the determinism contract that makes heterogeneous semi-async runs
+replayable: the assignment is a pure function of ``(spec, n)``, group
+runners advance state in dispatch order, an all-SGD assignment matches
+the vmapped ``client_deltas`` oracle numerically, and a wall-clock
+heterogeneous run's ``Recording`` replays bitwise (the ISSUE 10
+satellite anchor).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import D2DNetwork, ServerConfig
+from repro.core.rounds import client_deltas
+from repro.fl import (ExecutionConfig, RoundPlan, StreamConfig,
+                      make_engine, parse_fault_spec)
+from repro.optim import (CLIENT_OPTIMIZERS, HeteroClientOptimizers,
+                         parse_client_optim)
+from repro.runtime import Recording, RuntimeConfig
+
+jax.config.update("jax_enable_x64", False)
+
+
+def quad_loss(params, batch):
+    x = params["x"]
+    b, = batch
+    return 0.5 * jnp.sum((x - b.mean(axis=0)) ** 2)
+
+
+def _setup(n=12, c=2, K=6, p=4, T=3, seed=3, batch_seed=7):
+    net = D2DNetwork(n=n, c=c, k_range=(4, 6), p_fail=0.1)
+    cfg = ServerConfig(T=T, t_max=K, phi_max=0.3, seed=seed,
+                       eta=lambda t: 0.2)
+    plan = RoundPlan.connectivity_aware(net, cfg)
+    rng = np.random.default_rng(batch_seed)
+    targets = rng.standard_normal((n, p)).astype(np.float32)
+    batches = [
+        (jnp.asarray(targets[:, None, None, :]
+                     + 0.05 * rng.standard_normal((n, T, 2, p)),
+                     jnp.float32),)
+        for _ in range(K)]
+    return plan, {"x": jnp.zeros(p)}, batches
+
+
+# ---------------------------------------------------------------------------
+# assignment parsing
+# ---------------------------------------------------------------------------
+
+def test_parse_client_optim_single_and_round_robin():
+    assert parse_client_optim("sgd", 3) == ("sgd", "sgd", "sgd")
+    assert parse_client_optim("sgd,adam", 5) == \
+        ("sgd", "adam", "sgd", "adam", "sgd")
+    assert parse_client_optim(" sgd , adam ", 2) == ("sgd", "adam")
+
+
+def test_parse_client_optim_rejects_unknown_and_empty():
+    with pytest.raises(ValueError, match="unknown"):
+        parse_client_optim("sgd,nadam", 4)
+    with pytest.raises(ValueError, match="empty"):
+        parse_client_optim(" , ", 4)
+    assert set(CLIENT_OPTIMIZERS) == {"sgd", "momentum", "adam", "adamw"}
+
+
+# ---------------------------------------------------------------------------
+# deltas: shapes, SGD oracle parity, stateful evolution
+# ---------------------------------------------------------------------------
+
+def _round_batches(n=6, T=3, p=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.standard_normal((n, T, 2, p)), jnp.float32),)
+
+
+def test_deltas_shapes_and_dtype():
+    n, p = 6, 4
+    params = {"x": jnp.zeros(p)}
+    h = HeteroClientOptimizers(quad_loss, params,
+                               parse_client_optim("sgd,adam", n))
+    d = h.deltas(params, _round_batches(n), 0.1)
+    assert d["x"].shape == (n, p) and d["x"].dtype == jnp.float32
+
+
+def test_all_sgd_matches_client_deltas_oracle():
+    n, p = 6, 4
+    params = {"x": jnp.ones(p)}
+    batches = _round_batches(n)
+    h = HeteroClientOptimizers(quad_loss, params,
+                               parse_client_optim("sgd", n))
+    d_h = h.deltas(params, batches, 0.2)
+    d_o = client_deltas(quad_loss, params, batches,
+                        jnp.asarray(0.2, jnp.float32))
+    np.testing.assert_allclose(np.asarray(d_h["x"]), np.asarray(d_o["x"]),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_adam_state_advances_and_changes_deltas():
+    n, p = 4, 4
+    params = {"x": jnp.ones(p)}
+    batches = _round_batches(n)
+    h = HeteroClientOptimizers(quad_loss, params,
+                               parse_client_optim("adam", n))
+    s0 = jax.tree.leaves(h.states)
+    d1 = h.deltas(params, batches, 0.1)
+    s1 = jax.tree.leaves(h.states)
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(s0, s1)), "state must advance"
+    # same inputs, evolved state: Adam's moments make the second call
+    # produce different deltas (a pure-SGD runner would repeat itself)
+    d2 = h.deltas(params, batches, 0.1)
+    assert not np.array_equal(np.asarray(d1["x"]), np.asarray(d2["x"]))
+
+
+def test_warmup_does_not_advance_state():
+    n, p = 4, 4
+    params = {"x": jnp.ones(p)}
+    batches = _round_batches(n)
+    h = HeteroClientOptimizers(quad_loss, params,
+                               parse_client_optim("sgd,adam", n))
+    before = [np.asarray(leaf) for leaf in jax.tree.leaves(h.states)]
+    h.warmup(params, batches, 0.1)
+    after = jax.tree.leaves(h.states)
+    assert all(np.array_equal(a, np.asarray(b))
+               for a, b in zip(before, after))
+
+
+def test_deltas_deterministic_given_dispatch_order():
+    n, p = 6, 4
+    params = {"x": jnp.ones(p)}
+    seq = [_round_batches(n, seed=s) for s in range(3)]
+
+    def run():
+        h = HeteroClientOptimizers(quad_loss, params,
+                                   parse_client_optim("sgd,adam", n))
+        return [np.asarray(h.deltas(params, b, 0.1)["x"]) for b in seq]
+
+    for a, b in zip(run(), run()):
+        assert np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# engine integration: hetero runs replay bitwise from recordings
+# ---------------------------------------------------------------------------
+
+HETERO_FAULTY = StreamConfig(
+    buffer=8, deadline=0.8, staleness="poly", max_staleness=4,
+    client_optim="sgd,adam",
+    faults=parse_fault_spec(
+        "markov:p_fail=0.2,latency=exponential,mean=2.0,"
+        "duplicate_rate=0.1"),
+    fault_seed=5)
+
+
+def test_hetero_virtual_ingest_matches_stream_engine_bitwise():
+    plan, params0, batches = _setup()
+    p1, h1 = make_engine(ExecutionConfig(stream=HETERO_FAULTY),
+                         quad_loss).execute(plan, params0, batches)
+    e2 = make_engine(ExecutionConfig(stream=HETERO_FAULTY,
+                                     runtime=RuntimeConfig(
+                                         clock="virtual")), quad_loss)
+    p2, h2 = e2.execute(plan, params0, batches)
+    assert np.array_equal(np.asarray(p1["x"]), np.asarray(p2["x"]))
+    for r1, r2 in zip(h1.records, h2.records):
+        assert (r1.t, r1.m, r1.m_actual, r1.d2s, r1.d2d) == \
+            (r2.t, r2.m, r2.m_actual, r2.d2s, r2.d2d)
+        assert r1.stream == r2.stream
+
+
+def test_hetero_wall_run_replays_bitwise_from_recording():
+    # the ISSUE satellite: optimizer-heterogeneous wall-clock ingestion
+    # must still be a replayable artifact -- dispatch-order state
+    # threading is what makes this hold
+    plan, params0, batches = _setup()
+    e = make_engine(ExecutionConfig(stream=HETERO_FAULTY,
+                                    runtime=RuntimeConfig(
+                                        clock="wall", time_scale=0.02)),
+                    quad_loss)
+    _, h_live = e.execute(plan, params0, batches)
+    rec = Recording.from_json(e.last_recording.to_json())
+    assert rec.stream["client_optim"] == "sgd,adam"
+    assert rec.stream_config().client_optim == "sgd,adam"
+    assert rec.verify(quad_loss, params0, batches) == []
+    assert len(h_live.records) == plan.n_rounds

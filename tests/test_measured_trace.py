@@ -1,0 +1,137 @@
+"""measured_trace topology family: recorded contact traces as specs.
+
+A realized ``RoundPlan``'s mixing support -- including the measured
+plans inside wall-clock ``Recording`` artifacts -- round-trips through
+``MeasuredTrace.from_plan`` into a registered, JSON-serializable spec
+that regenerates the same equal-neighbor matrices bitwise, rng-free.
+The empty-trace ring fallback is what keeps the family sampleable under
+the registry-wide property suites' default parameters.
+"""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import topology
+from repro.core import D2DNetwork, ServerConfig
+from repro.core.adjacency import network_matrix
+from repro.fl import (ExecutionConfig, RoundPlan, StreamConfig,
+                      make_engine, parse_fault_spec)
+from repro.topology import MeasuredTrace, TopologySpec
+from repro.runtime import RuntimeConfig
+
+
+def _plan(n=18, c=3, K=4, seed=5):
+    net = D2DNetwork(n=n, c=c, k_range=(4, 6), p_fail=0.1)
+    cfg = ServerConfig(T=2, t_max=K, phi_max=0.3, seed=seed,
+                       eta=lambda t: 0.2)
+    return RoundPlan.connectivity_aware(net, cfg)
+
+
+def test_registered_with_ring_fallback_defaults():
+    assert "measured_trace" in topology.families()
+    model = topology.make_spec("measured_trace", n=24, c=3).build()
+    rng = np.random.default_rng(0)
+    for t in range(3):
+        snapshots = [cg.W.copy() for cg in model.sample(rng, t)]
+        for W in snapshots:
+            assert (W.sum(axis=1) > 0).all()
+            assert (np.diag(W) == 1).all()
+        # rng-free and time-invariant in fallback mode
+        again = [cg.W for cg in model.sample(np.random.default_rng(9), t)]
+        assert all(np.array_equal(a, b)
+                   for a, b in zip(snapshots, again))
+
+
+def test_from_plan_regenerates_mixing_matrices_bitwise():
+    plan = _plan()
+    spec = MeasuredTrace.from_plan(plan)
+    assert spec.family == "measured_trace" and spec.c == 1
+    model = spec.build()
+    rng = np.random.default_rng(0)
+    for t in range(plan.n_rounds):
+        A = network_matrix(model.sample(rng, t), plan.n_clients)
+        A0 = np.asarray(plan.A_t[t])
+        assert ((A != 0) == (A0 != 0)).all()
+        np.testing.assert_array_equal(A.astype(np.float32),
+                                      A0.astype(np.float32))
+
+
+def test_wrap_and_clamp_indexing():
+    plan = _plan(K=3)
+    rng = np.random.default_rng(0)
+    wrapped = MeasuredTrace.from_plan(plan, wrap=True).build()
+    w5 = [cg.W for cg in wrapped.sample(rng, 5)]      # 5 % 3 == 2
+    w2 = [cg.W for cg in wrapped.sample(rng, 2)]
+    assert all(np.array_equal(a, b) for a, b in zip(w5, w2))
+    clamped = MeasuredTrace.from_plan(plan, wrap=False).build()
+    c9 = [cg.W for cg in clamped.sample(rng, 9)]      # clamps to last
+    c2 = [cg.W for cg in clamped.sample(rng, 2)]
+    assert all(np.array_equal(a, b) for a, b in zip(c9, c2))
+
+
+def test_spec_json_round_trip():
+    spec = MeasuredTrace.from_plan(_plan())
+    rt = TopologySpec.from_dict(json.loads(spec.to_json()))
+    assert rt == spec
+    # and the registry round-trip builds an equivalent model
+    m1, m2 = spec.build(), topology.from_json(spec.to_json())
+    rng = np.random.default_rng(0)
+    a = [cg.W for cg in m1.sample(rng, 1)]
+    b = [cg.W for cg in m2.sample(rng, 1)]
+    assert all(np.array_equal(x, y) for x, y in zip(a, b))
+
+
+def test_from_sparse_plan():
+    net = D2DNetwork(n=18, c=3, k_range=(4, 6), p_fail=0.1)
+    cfg = ServerConfig(T=2, t_max=3, phi_max=0.3, seed=5,
+                       eta=lambda t: 0.2)
+    plan = RoundPlan.connectivity_aware(net, cfg, sparse=True)
+    assert plan.is_sparse
+    model = MeasuredTrace.from_plan(plan).build()
+    rng = np.random.default_rng(0)
+    dense = plan.A_t.dense()
+    for t in range(plan.n_rounds):
+        A = network_matrix(model.sample(rng, t), plan.n_clients)
+        np.testing.assert_array_equal(A.astype(np.float32),
+                                      dense[t].astype(np.float32))
+
+
+def test_from_recording_plan():
+    # TrafficRecorder output is just a realized plan: a recorded ingest
+    # run's measured topology becomes a regenerable spec
+    def quad_loss(params, batch):
+        x = params["x"]
+        b, = batch
+        return 0.5 * jnp.sum((x - b.mean(axis=0)) ** 2)
+
+    plan = _plan(K=3)
+    rng = np.random.default_rng(7)
+    batches = [
+        (jnp.asarray(rng.standard_normal((18, 2, 2, 4)), jnp.float32),)
+        for _ in range(3)]
+    stream = StreamConfig(
+        buffer=8, deadline=0.8,
+        faults=parse_fault_spec(
+            "markov:p_fail=0.2,latency=exponential,mean=2.0"),
+        fault_seed=5)
+    e = make_engine(ExecutionConfig(stream=stream,
+                                    runtime=RuntimeConfig(
+                                        clock="virtual")), quad_loss)
+    e.execute(plan, {"x": jnp.zeros(4)}, batches)
+    rec = e.last_recording
+    spec = MeasuredTrace.from_plan(rec.plan)
+    model = spec.build()
+    srng = np.random.default_rng(0)
+    for t in range(rec.plan.n_rounds):
+        A = network_matrix(model.sample(srng, t), rec.plan.n_clients)
+        np.testing.assert_array_equal(
+            A.astype(np.float32),
+            np.asarray(rec.plan.A_t[t]).astype(np.float32))
+
+
+def test_unknown_param_rejected():
+    with pytest.raises(ValueError, match="unknown parameter"):
+        topology.make_spec("measured_trace", n=8, c=2, hops=2)
